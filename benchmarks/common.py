@@ -1,0 +1,53 @@
+"""Shared benchmark helpers: graph suite, timing, CSV output.
+
+This container is a single CPU core — wall-times here measure the *JAX
+engines on CPU* (the sequential numpy references are the paper's baseline
+role).  The TPU performance story lives in the dry-run roofline
+(EXPERIMENTS.md §Roofline/§Perf); these benchmarks reproduce the paper's
+*relative* claims: push-count ratios, parameter trends, work scaling.
+"""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+import jax
+
+from repro.graphs import make_graph
+
+# Stand-ins for the paper's graph suite (Table 2), CPU-sized.
+GRAPH_SUITE = {
+    "sbm-planted": dict(family="sbm", k=8, size=100, p_in=0.15, p_out=0.002),
+    "randLocal-50k": dict(family="randLocal", n=50_000, degree=5),
+    "3D-grid-20": dict(family="3D-grid", side=20),
+    "rmat-12": dict(family="rmat", scale=12, edge_factor=8),
+}
+
+_CACHE = {}
+
+
+def get_graph(name: str):
+    if name not in _CACHE:
+        kw = dict(GRAPH_SUITE[name])
+        fam = kw.pop("family")
+        _CACHE[name] = make_graph(fam, **kw)
+    return _CACHE[name]
+
+
+def timeit(fn, *args, repeats: int = 3, **kw):
+    """Median wall time in µs (jit warm-up excluded by a priming call)."""
+    out = fn(*args, **kw)
+    jax.block_until_ready(jax.tree.leaves(out)) if jax.tree.leaves(out) else None
+    times = []
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        out = fn(*args, **kw)
+        leaves = jax.tree.leaves(out)
+        if leaves:
+            jax.block_until_ready(leaves)
+        times.append(time.perf_counter() - t0)
+    return float(np.median(times)) * 1e6, out
+
+
+def emit(name: str, us: float, derived: str = ""):
+    print(f"{name},{us:.1f},{derived}", flush=True)

@@ -1,0 +1,31 @@
+"""Figure 2 reproduction: original vs optimized PR-Nibble update rule.
+
+Paper claim (C2): the optimized (coordinate-descent step size) rule gives
+the same conductance with 1.4–6.4× less work.  We report push counts (the
+machine-independent work measure) and wall time, plus the sweep conductance
+of both solutions.
+"""
+import numpy as np
+
+from repro.core import pr_nibble, sweep_cut_dense
+from .common import GRAPH_SUITE, get_graph, emit, timeit
+
+
+def run(alpha=0.01, eps=1e-7):
+    for name in GRAPH_SUITE:
+        g = get_graph(name)
+        seed = 5 if name == "sbm-planted" else int(np.argmax(np.asarray(g.deg)))
+        us_o, orig = timeit(pr_nibble, g, seed, eps, alpha, False, repeats=1)
+        us_n, opt = timeit(pr_nibble, g, seed, eps, alpha, True, repeats=1)
+        so = sweep_cut_dense(g, orig.p, 1 << 12, 1 << 18)
+        sn = sweep_cut_dense(g, opt.p, 1 << 12, 1 << 18)
+        speedup = int(orig.pushes) / max(int(opt.pushes), 1)
+        emit(f"fig2/{name}/original", us_o,
+             f"pushes={int(orig.pushes)};cond={float(so.best_conductance):.4f}")
+        emit(f"fig2/{name}/optimized", us_n,
+             f"pushes={int(opt.pushes)};cond={float(sn.best_conductance):.4f};"
+             f"work_ratio={speedup:.2f}")
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,52 @@
+"""Figure 6 reproduction: runtime & conductance vs parameter settings.
+
+Paper trends (C5), all on one graph from one seed:
+  Nibble:      T↑ or ε↓  ⇒ time↑, conductance↓
+  PR-Nibble:   ε↓        ⇒ time↑, conductance↓
+  HK-PR:       N↑ or ε↓  ⇒ time↑, conductance↓
+  rand-HK-PR:  N↑ or K↑  ⇒ time↑, conductance↓
+"""
+import numpy as np
+import jax
+
+from repro.core import (nibble, pr_nibble, hk_pr, rand_hk_pr, sweep_cut,
+                        sweep_cut_dense)
+from .common import get_graph, emit, timeit
+
+
+def _cond(g, p):
+    return float(sweep_cut_dense(g, p, 1 << 12, 1 << 18).best_conductance)
+
+
+def run(graph_name: str = "sbm-planted"):
+    g = get_graph(graph_name)
+    seed = 5 if graph_name == "sbm-planted" else int(np.argmax(np.asarray(g.deg)))
+
+    for T in (5, 10, 20):
+        for eps in (1e-6, 1e-7, 1e-8):
+            us, res = timeit(nibble, g, seed, eps, T, repeats=1)
+            emit(f"fig6/nibble/T={T},eps={eps:g}", us,
+                 f"cond={_cond(g, res.p):.4f};work={int(res.edge_work)}")
+
+    for eps in (1e-5, 1e-6, 1e-7):
+        us, res = timeit(pr_nibble, g, seed, eps, 0.01, repeats=1)
+        emit(f"fig6/pr_nibble/eps={eps:g}", us,
+             f"cond={_cond(g, res.p):.4f};pushes={int(res.pushes)}")
+
+    for N in (5, 10, 20):
+        for eps in (1e-5, 1e-7):
+            us, res = timeit(hk_pr, g, seed, N, eps, 10.0, repeats=1)
+            emit(f"fig6/hk_pr/N={N},eps={eps:g}", us,
+                 f"cond={_cond(g, res.p):.4f};work={int(res.edge_work)}")
+
+    for NW in (1024, 4096):
+        for K in (5, 10, 20):
+            us, res = timeit(rand_hk_pr, g, seed, NW, K, 10.0,
+                             jax.random.PRNGKey(0), repeats=1)
+            sw = sweep_cut(g, res.ids, res.vals, res.nnz, 1 << 18)
+            emit(f"fig6/rand_hk/N={NW},K={K}", us,
+                 f"cond={float(sw.best_conductance):.4f}")
+
+
+if __name__ == "__main__":
+    run()

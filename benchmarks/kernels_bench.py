@@ -1,0 +1,46 @@
+"""Kernel micro-benchmarks: Pallas hot-spot layers vs XLA baselines.
+
+On CPU the Pallas kernels run in interpret mode (Python — wall time is
+meaningless), so we benchmark the *wrapper pipelines* against their XLA
+equivalents and report the work sizes the TPU kernels would see; the kernel
+BlockSpec/VMEM reasoning lives in EXPERIMENTS.md §Roofline.
+"""
+import numpy as np
+import jax.numpy as jnp
+
+from repro.kernels import ops
+from .common import get_graph, emit, timeit
+
+
+def run():
+    g = get_graph("randLocal-50k")
+    rng = np.random.default_rng(0)
+
+    # saturated diffusion step: hybrid ELL+COO vs pure XLA scatter
+    nbr, wgt, es, ed, ew, n_pad, W = ops.pack_banded_ell(g, halo=2)
+    p = jnp.asarray(rng.random(n_pad), jnp.float32)
+    us, _ = timeit(ops.diffusion_spmv, nbr, wgt, es, ed, ew, p, halo=2)
+    emit("kernels/band_spmv_hybrid", us,
+         f"n={n_pad};W={W};escapers={int(es.shape[0])}")
+
+    gnp = g.to_numpy()
+    src = jnp.asarray(np.repeat(np.arange(g.n), gnp.deg), jnp.int32)
+    dst = jnp.asarray(gnp.indices[: 2 * g.m], jnp.int32)
+    w = jnp.asarray(0.5 / gnp.deg[gnp.indices[: 2 * g.m]], jnp.float32)
+
+    def xla_scatter(p):
+        return jnp.zeros(n_pad, jnp.float32).at[src].add(w * p[dst])
+
+    us, _ = timeit(xla_scatter, p)
+    emit("kernels/xla_scatter_baseline", us, f"edges={2 * g.m}")
+
+    # prefix scan
+    x = jnp.asarray(rng.random(1 << 18), jnp.float32)
+    us, _ = timeit(ops.prefix_sum, x)
+    emit("kernels/prefix_sum_pallas_pipeline", us, "n=262144")
+    us, _ = timeit(jnp.cumsum, x)
+    emit("kernels/cumsum_xla_baseline", us, "n=262144")
+
+
+if __name__ == "__main__":
+    run()

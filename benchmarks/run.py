@@ -1,0 +1,39 @@
+"""Benchmark harness — one module per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV.  --fast trims graph sizes (default);
+--full runs the complete suite.
+"""
+import argparse
+import sys
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true")
+    ap.add_argument("--only", default=None,
+                    help="comma list: table1,table3,fig2,fig6,fig9,fig10,kernels")
+    args = ap.parse_args()
+    from . import (table1_pushes, table3_runtimes, fig2_opt_rule, fig6_params,
+                   fig9_sweep_scaling, fig10_ncp, kernels_bench)
+    suites = {
+        "table1": lambda: table1_pushes.run(),
+        "table3": lambda: table3_runtimes.run(fast=not args.full),
+        "fig2": lambda: fig2_opt_rule.run(),
+        "fig6": lambda: fig6_params.run(),
+        "fig9": lambda: fig9_sweep_scaling.run(),
+        "fig10": lambda: fig10_ncp.run(),
+        "kernels": lambda: kernels_bench.run(),
+    }
+    only = args.only.split(",") if args.only else list(suites)
+    print("name,us_per_call,derived")
+    for k in only:
+        try:
+            suites[k]()
+        except Exception as e:  # keep the harness going; report the failure
+            print(f"{k}/ERROR,0,{type(e).__name__}:{str(e)[:120]}",
+                  file=sys.stdout, flush=True)
+            raise
+
+
+if __name__ == '__main__':
+    main()

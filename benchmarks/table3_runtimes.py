@@ -1,0 +1,61 @@
+"""Table 3 analogue: runtimes of the four diffusions + sweep cut,
+JAX engine vs sequential numpy reference, across the graph suite.
+
+Paper params (Table 3 caption): Nibble T=20 ε=1e-8; PR-Nibble α=0.01 ε=1e-7;
+HK-PR t=10 N=20 ε=1e-7; rand-HK-PR t=10 K=10 (N scaled down for CPU).
+On this CPU the JAX engine's vectorized rounds play the "parallel" role; the
+real scaling story is the roofline dry-run.
+"""
+import numpy as np
+import jax
+
+from repro.core import (nibble, pr_nibble, hk_pr, rand_hk_pr,
+                        sweep_cut_dense, seq)
+from .common import GRAPH_SUITE, get_graph, emit, timeit
+
+
+def run(fast: bool = True):
+    graphs = ["sbm-planted", "3D-grid-20"] if fast else list(GRAPH_SUITE)
+    walks = 4096 if fast else 1 << 16
+    for name in graphs:
+        g = get_graph(name)
+        seed = 5 if name == "sbm-planted" else int(np.argmax(np.asarray(g.deg)))
+
+        us, nres = timeit(nibble, g, seed, 1e-8, 20, repeats=1)
+        emit(f"table3/{name}/nibble_par", us, f"pushes={int(nres.pushes)}")
+        us, _ = timeit(lambda: seq.seq_nibble(g, seed, 1e-8, 20), repeats=1)
+        emit(f"table3/{name}/nibble_seq", us, "")
+
+        us, pres = timeit(pr_nibble, g, seed, 1e-7, 0.01, repeats=1)
+        emit(f"table3/{name}/pr_nibble_par", us,
+             f"pushes={int(pres.pushes)};iters={int(pres.iterations)}")
+        us, _ = timeit(lambda: seq.seq_pr_nibble(g, seed, 1e-7, 0.01),
+                       repeats=1)
+        emit(f"table3/{name}/pr_nibble_seq", us, "")
+
+        us, hres = timeit(hk_pr, g, seed, 20, 1e-7, 10.0, repeats=1)
+        emit(f"table3/{name}/hk_pr_par", us, f"pushes={int(hres.pushes)}")
+        us, _ = timeit(lambda: seq.seq_hk_pr(g, seed, 20, 1e-7, 10.0),
+                       repeats=1)
+        emit(f"table3/{name}/hk_pr_seq", us, "")
+
+        us, rres = timeit(rand_hk_pr, g, seed, walks, 10, 10.0,
+                          jax.random.PRNGKey(0), repeats=1)
+        emit(f"table3/{name}/rand_hk_par", us, f"nnz={int(rres.nnz)}")
+        us, _ = timeit(lambda: seq.seq_rand_hk_pr(g, seed, walks // 8, 10,
+                                                  10.0), repeats=1)
+        emit(f"table3/{name}/rand_hk_seq", us, f"walks={walks // 8}")
+
+        # sweep on the Nibble output (paper's Table 3 convention)
+        us, sres = timeit(sweep_cut_dense, g, nres.p, 1 << 12, 1 << 18,
+                          repeats=1)
+        emit(f"table3/{name}/sweep_par", us,
+             f"cond={float(sres.best_conductance):.4f};size={int(sres.best_size)}")
+        p_np = np.asarray(nres.p)
+        p_dict = {i: float(p_np[i]) for i in np.flatnonzero(p_np > 0)}
+        us, _ = timeit(lambda: seq.seq_sweep_cut(g, p_dict), repeats=1)
+        emit(f"table3/{name}/sweep_seq", us, "")
+
+
+if __name__ == "__main__":
+    run()

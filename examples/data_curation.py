@@ -1,0 +1,57 @@
+"""Paper ↔ LM bridge: cluster-balanced data curation.
+
+A production coupling of local graph clustering with LM training: build a
+document-similarity graph, peel local clusters with PR-Nibble (the paper's
+interactive engine, batched), and sample training batches balanced across
+clusters instead of uniformly — the dedup/diversity curation pattern.
+
+    PYTHONPATH=src python examples/data_curation.py
+"""
+import numpy as np
+
+from repro.graphs import sbm
+from repro.core import pr_nibble, sweep_cut_dense
+
+# --- stand-in corpus: 600 "documents" with 6 latent topics ------------------
+# similarity graph = SBM (in production: kNN over embeddings)
+graph = sbm(k=6, size=100, p_in=0.12, p_out=0.003, seed=7)
+n_docs = graph.n
+rng = np.random.default_rng(0)
+
+# --- discover clusters by seeding PR-Nibble on uncovered documents ---------
+assignment = np.full(n_docs, -1)
+cluster_id = 0
+deg = np.asarray(graph.deg)
+while (assignment < 0).sum() > n_docs * 0.05 and cluster_id < 12:
+    uncovered = np.flatnonzero(assignment < 0)
+    seed = int(uncovered[np.argmax(deg[uncovered])])
+    diff = pr_nibble(graph, seed, eps=1e-7, alpha=0.01)
+    sw = sweep_cut_dense(graph, diff.p, 1 << 11, 1 << 17)
+    members = np.asarray(sw.cluster())[: int(sw.best_size)]
+    members = members[assignment[members] < 0]
+    if members.size < 5:
+        assignment[seed] = cluster_id  # singleton fallback
+    else:
+        assignment[members] = cluster_id
+    print(f"cluster {cluster_id}: {members.size:4d} docs "
+          f"(φ={float(sw.best_conductance):.4f})")
+    cluster_id += 1
+assignment[assignment < 0] = cluster_id  # leftovers bucket
+
+# --- cluster-balanced sampling vs uniform ----------------------------------
+clusters = [np.flatnonzero(assignment == c) for c in range(cluster_id + 1)
+            if (assignment == c).any()]
+batch = 64
+uniform = rng.choice(n_docs, size=batch)
+balanced = np.concatenate([
+    rng.choice(c, size=max(batch // len(clusters), 1)) for c in clusters])[:batch]
+
+def spread(sample):
+    counts = np.bincount(assignment[sample], minlength=cluster_id + 1)
+    probs = counts[counts > 0] / counts.sum()
+    return float(-(probs * np.log(probs)).sum())
+
+print(f"\nbatch topic-entropy: uniform={spread(uniform):.3f}  "
+      f"cluster-balanced={spread(balanced):.3f} "
+      f"(max={np.log(len(clusters)):.3f})")
+print("cluster-balanced batches feed repro.data pipelines via doc-id lists.")

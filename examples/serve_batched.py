@@ -1,0 +1,53 @@
+"""End-to-end serving driver: train a small LM briefly, then serve a batched
+request stream through prefill + continuous-batching decode.
+
+    PYTHONPATH=src python examples/serve_batched.py [--steps 30]
+"""
+import argparse
+import time
+
+import numpy as np
+import jax
+
+from repro.configs import smoke_config
+from repro.models import build_model
+from repro.train import AdamWConfig, adamw_init, make_train_step
+from repro.data import DataConfig, TokenPipeline
+from repro.serve import ServeConfig, batched_serve
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=30)
+    ap.add_argument("--requests", type=int, default=12)
+    args = ap.parse_args()
+
+    cfg = smoke_config("phi3-mini-3.8b")
+    model = build_model(cfg, remat=False)
+    params = model.init_fn(jax.random.PRNGKey(0))
+    opt = adamw_init(params)
+    step = jax.jit(make_train_step(model, AdamWConfig(lr=5e-3)))
+    pipe = TokenPipeline(DataConfig(vocab=cfg.vocab, global_batch=8,
+                                    seq_len=64, seed=0))
+    print(f"training {cfg.arch_id} (reduced) for {args.steps} steps ...")
+    for i in range(args.steps):
+        params, opt, m = step(params, opt, pipe.get_batch(i))
+        if i % 10 == 0:
+            print(f"  step {i:3d} loss {float(m['loss']):.3f}")
+
+    rng = np.random.default_rng(0)
+    requests = [rng.integers(0, cfg.vocab, size=rng.integers(4, 20))
+                for _ in range(args.requests)]
+    print(f"\nserving {len(requests)} ragged requests in waves of 4 ...")
+    t0 = time.perf_counter()
+    outs = batched_serve(model, params, requests, batch_slots=4,
+                         cfg=ServeConfig(max_new_tokens=8), prompt_len=20)
+    dt = time.perf_counter() - t0
+    tok_s = sum(len(o) for o in outs) / dt
+    for i, o in enumerate(outs[:4]):
+        print(f"  req {i}: prompt_len={len(requests[i]):2d} -> {o.tolist()}")
+    print(f"throughput: {tok_s:.1f} tok/s (CPU, reduced model)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,72 @@
+"""Train a ~100M-parameter LM for a few hundred steps — the end-to-end
+training driver (scaled for real hardware; on this CPU container use
+--tiny for a fast demonstration of the same path).
+
+    PYTHONPATH=src python examples/train_lm.py --tiny          # CPU demo
+    PYTHONPATH=src python examples/train_lm.py --steps 300     # ~100M run
+"""
+import argparse
+import dataclasses
+import time
+
+import jax
+
+from repro.configs import get_config
+from repro.models import build_model
+from repro.train import (AdamWConfig, Checkpointer, adamw_init,
+                         make_train_step)
+from repro.data import DataConfig, TokenPipeline
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=300)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=512)
+    ap.add_argument("--tiny", action="store_true")
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_train_lm")
+    args = ap.parse_args()
+
+    # a ~100M-param yi-family config (12L, d=768, 12H, tied 32k vocab)
+    base = get_config("yi-6b")
+    cfg = dataclasses.replace(
+        base, arch_id="yi-100m", n_layers=12, d_model=768, n_heads=12,
+        n_kv_heads=4, head_dim=64, d_ff=2048, vocab=32_000,
+        q_chunk=256, kv_chunk=256,
+        param_dtype="float32", compute_dtype="float32")
+    if args.tiny:
+        cfg = dataclasses.replace(cfg, n_layers=4, d_model=128, n_heads=4,
+                                  n_kv_heads=2, head_dim=32, d_ff=512,
+                                  vocab=2048)
+        args.steps = min(args.steps, 60)
+        args.seq = min(args.seq, 128)
+
+    model = build_model(cfg, remat=True)
+    params = model.init_fn(jax.random.PRNGKey(0))
+    n = sum(x.size for x in jax.tree.leaves(params))
+    print(f"{cfg.arch_id}: {n / 1e6:.1f}M params, {args.steps} steps, "
+          f"batch {args.batch} x seq {args.seq}")
+
+    ocfg = AdamWConfig(lr=6e-4, warmup_steps=args.steps // 20 + 1,
+                       total_steps=args.steps)
+    step = jax.jit(make_train_step(model, ocfg), donate_argnums=(0, 1))
+    pipe = TokenPipeline(DataConfig(vocab=cfg.vocab, global_batch=args.batch,
+                                    seq_len=args.seq, seed=0))
+    opt = adamw_init(params)
+    ck = Checkpointer(args.ckpt_dir, keep=2)
+    t0 = time.perf_counter()
+    for i in range(args.steps):
+        params, opt, m = step(params, opt, pipe.get_batch(i))
+        if i % 20 == 0 or i == args.steps - 1:
+            tok_s = args.batch * args.seq * (i + 1) / (time.perf_counter() - t0)
+            print(f"step {i:4d} loss {float(m['loss']):.4f} "
+                  f"gnorm {float(m['grad_norm']):.2f} ({tok_s:,.0f} tok/s)")
+        if i and i % 100 == 0:
+            ck.save({"params": params, "opt": opt}, i)
+    ck.save({"params": params, "opt": opt}, args.steps - 1, blocking=True)
+    ck.close()
+    print("done; checkpoints in", args.ckpt_dir)
+
+
+if __name__ == "__main__":
+    main()

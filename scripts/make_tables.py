@@ -1,0 +1,91 @@
+"""Regenerate the EXPERIMENTS.md §Dry-run/§Roofline tables from the cached
+dry-run JSONs.  Usage: PYTHONPATH=src python scripts/make_tables.py"""
+import glob
+import json
+import os
+
+DRY = os.path.join(os.path.dirname(__file__), "..", "experiments", "dryrun")
+
+
+def fmt_bytes(b):
+    for unit in ("B", "KB", "MB", "GB", "TB"):
+        if b < 1024 or unit == "TB":
+            return f"{b:.1f}{unit}" if unit != "B" else f"{int(b)}B"
+        b /= 1024.0
+
+
+def load():
+    cells = {}
+    for f in sorted(glob.glob(os.path.join(DRY, "*.json"))):
+        d = json.load(open(f))
+        cells[d["cell"]] = d
+    return cells
+
+
+def roofline_table(cells, mesh="pod", variants=False):
+    rows = []
+    hdr = ("| cell | bottleneck | compute_s | memory_s | collective_s | "
+           "MODEL/HLO flops | roofline frac | peak HBM frac |")
+    sep = "|" + "---|" * 8
+    rows.append(hdr)
+    rows.append(sep)
+    for key in sorted(cells):
+        d = cells[key]
+        is_variant = key.count("__") >= 3
+        if d.get("skipped"):
+            if (f"__{mesh}" in key) and not is_variant:
+                rows.append(f"| {key} | SKIP | — | — | — | — | — | — "
+                            f"({d['reason']}) |")
+            continue
+        if "error" in d:
+            rows.append(f"| {key} | ERROR | — | — | — | — | — | — |")
+            continue
+        if variants != is_variant or f"__{mesh}" not in key:
+            continue
+        ratio = d.get("useful_flops_ratio", 0)
+        rows.append(
+            f"| {key} | {d['bottleneck'].replace('_s','')} "
+            f"| {d['compute_s']:.3f} | {d['memory_s']:.3f} "
+            f"| {d['collective_s']:.3f} | {ratio:.3f} "
+            f"| {d.get('roofline_fraction', 0)*100:.2f}% "
+            f"| {d['peak_hbm_frac']:.2f} |")
+    return "\n".join(rows)
+
+
+def dryrun_table(cells):
+    rows = ["| cell | chips | lower+compile (s) | per-chip HBM "
+            "(args+temp+out) | collective bytes/chip | status |",
+            "|" + "---|" * 6]
+    for key in sorted(cells):
+        d = cells[key]
+        if key.count("__") >= 3 and "graph" not in key:
+            continue
+        if d.get("skipped"):
+            rows.append(f"| {key} | — | — | — | — | SKIP: {d['reason']} |")
+        elif "error" in d:
+            rows.append(f"| {key} | — | — | — | — | ERROR |")
+        else:
+            hbm = (d["argument_bytes"] + d["temp_bytes"] + d["output_bytes"])
+            rows.append(
+                f"| {key} | {d.get('chips', d.get('num_chips','?'))} "
+                f"| {d.get('lower_s', 0)}+{d.get('compile_s', 0)} "
+                f"| {fmt_bytes(hbm)} | {fmt_bytes(d['collective_bytes'])} "
+                f"| ok |")
+    return "\n".join(rows)
+
+
+if __name__ == "__main__":
+    cells = load()
+    n_ok = sum(1 for d in cells.values()
+               if not d.get("skipped") and "error" not in d)
+    n_skip = sum(1 for d in cells.values() if d.get("skipped"))
+    n_err = sum(1 for d in cells.values() if "error" in d)
+    print(f"cells: {n_ok} ok, {n_skip} skipped, {n_err} errors\n")
+    print("## Dry-run table\n")
+    print(dryrun_table(cells))
+    print("\n## Roofline (single pod)\n")
+    print(roofline_table(cells, "pod"))
+    print("\n## Roofline (multi-pod)\n")
+    print(roofline_table(cells, "multipod"))
+    print("\n## Variants\n")
+    print(roofline_table(cells, "pod", variants=True))

@@ -1,0 +1,5 @@
+"""repro — Parallel Local Graph Clustering (Shun et al. 2016) as a
+production JAX/TPU framework, plus the multi-arch LM substrate it is
+benchmarked against.  See DESIGN.md."""
+
+__version__ = "0.1.0"

@@ -1,0 +1,148 @@
+"""Framework configuration system.
+
+One dataclass describes every assigned architecture (dense GQA, MoE, SSM,
+RG-LRU hybrid, enc-dec, modality-stub VLM/audio) plus the training/serving
+shapes.  Configs are plain data — hashable, printable, serializable — and
+the model builder (`repro.models.model`) consumes nothing else.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+__all__ = ["ModelConfig", "ShapeConfig", "SHAPES", "MeshConfig"]
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    arch_id: str
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    d_ff: int
+    vocab: int
+    head_dim: Optional[int] = None          # default d_model // n_heads
+
+    # per-layer mixer pattern, cycled: e.g. ("attn",) for pure dense,
+    # ("attn_local",)*5 + ("attn_global",) for gemma3,
+    # ("rglru", "rglru", "attn_local") for recurrentgemma,
+    # ("mamba2",) for mamba2.
+    layer_pattern: Tuple[str, ...] = ("attn",)
+    window: int = 1024                      # sliding window for *_local
+    rope_theta: float = 10_000.0
+
+    # feed-forward
+    ff_kind: str = "swiglu"                 # "swiglu" | "moe" | "none"
+    n_experts: int = 0
+    top_k: int = 0
+    capacity_factor: float = 1.25
+    moe_per_row: bool = False               # per-batch-row (shard-local) dispatch
+
+    # SSM (mamba2)
+    ssm_state: int = 128
+    ssm_head_dim: int = 64
+    ssm_expand: int = 2
+    ssm_chunk: int = 256
+
+    # RG-LRU
+    rglru_conv_width: int = 4
+
+    # enc-dec (whisper)
+    enc_dec: bool = False
+    n_enc_layers: int = 0
+    enc_seq: int = 1500                     # audio frames after conv stub
+
+    # modality stub: prepend precomputed frontend embeddings
+    modality: Optional[str] = None          # None | "audio" | "vision"
+    n_modality_tokens: int = 0              # e.g. vision patches
+
+    # numerics
+    param_dtype: str = "bfloat16"
+    compute_dtype: str = "bfloat16"
+
+    # attention chunking (flash-style scan block sizes)
+    q_chunk: int = 512
+    kv_chunk: int = 1024
+
+    # notes from the source config (provenance)
+    source: str = ""
+
+    @property
+    def head_dim_(self) -> int:
+        return self.head_dim if self.head_dim else self.d_model // self.n_heads
+
+    @property
+    def d_expert(self) -> int:
+        """Per-expert hidden width (MoE archs list d_ff as per-expert)."""
+        return self.d_ff
+
+    def param_count(self) -> int:
+        """Approximate parameter count (for 6·N·D model-FLOPs)."""
+        d, v, L = self.d_model, self.vocab, self.n_layers
+        hd = self.head_dim_
+        total = v * d  # embedding (tied output head)
+        pattern = self.layer_pattern
+        for i in range(L):
+            kind = pattern[i % len(pattern)]
+            if kind.startswith("attn"):
+                total += d * self.n_heads * hd + d * 2 * self.n_kv_heads * hd \
+                    + self.n_heads * hd * d
+            elif kind == "mamba2":
+                d_in = self.ssm_expand * d
+                total += d * (2 * d_in + 2 * self.ssm_state) + d_in * d
+            elif kind == "rglru":
+                total += 3 * d * self.d_ff_rnn + 2 * self.d_ff_rnn * d
+            if self.ff_kind == "swiglu":
+                total += 3 * d * self.d_ff
+            elif self.ff_kind == "moe":
+                total += 3 * d * self.d_expert * self.n_experts + d * self.n_experts
+        if self.enc_dec:
+            for _ in range(self.n_enc_layers):
+                total += 4 * d * self.n_heads * hd + 3 * d * self.d_ff
+                total += 4 * d * self.n_heads * hd  # cross-attn in decoder
+        return total
+
+    def active_param_count(self) -> int:
+        """Active parameters per token (MoE: top_k of n_experts)."""
+        if self.ff_kind != "moe":
+            return self.param_count()
+        d, L = self.d_model, self.n_layers
+        total = self.param_count()
+        total -= 3 * d * self.d_expert * self.n_experts * L
+        total += 3 * d * self.d_expert * max(self.top_k, 1) * L
+        return total
+
+    @property
+    def d_ff_rnn(self) -> int:
+        """RG-LRU recurrent width (recurrentgemma uses d_model-width RNN)."""
+        return self.d_model
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeConfig:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str  # "train" | "prefill" | "decode"
+
+
+SHAPES = {
+    "train_4k": ShapeConfig("train_4k", 4096, 256, "train"),
+    "prefill_32k": ShapeConfig("prefill_32k", 32_768, 32, "prefill"),
+    "decode_32k": ShapeConfig("decode_32k", 32_768, 128, "decode"),
+    "long_500k": ShapeConfig("long_500k", 524_288, 1, "decode"),
+}
+
+
+@dataclasses.dataclass(frozen=True)
+class MeshConfig:
+    shape: Tuple[int, ...]
+    axes: Tuple[str, ...]
+
+    @property
+    def num_devices(self) -> int:
+        out = 1
+        for s in self.shape:
+            out *= s
+        return out

@@ -1,0 +1,78 @@
+"""Architecture registry: the 10 assigned archs + graph-engine configs.
+
+``get_config(arch_id)`` returns the exact published configuration;
+``smoke_config(arch_id)`` returns a reduced same-family config for CPU
+smoke tests (small widths/layers/experts, f32).  ``SHAPE_GRID`` enumerates
+the 40 assigned (arch × shape) cells with their applicability (skips are
+documented in DESIGN.md §Arch-applicability).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Tuple
+
+from repro.config import ModelConfig, SHAPES
+
+from .mamba2_2p7b import CONFIG as _mamba2
+from .gemma3_27b import CONFIG as _gemma3
+from .phi3_mini_3p8b import CONFIG as _phi3
+from .yi_6b import CONFIG as _yi6
+from .yi_9b import CONFIG as _yi9
+from .whisper_medium import CONFIG as _whisper
+from .recurrentgemma_2b import CONFIG as _rgemma
+from .llama4_maverick_400b import CONFIG as _llama4
+from .kimi_k2_1t import CONFIG as _kimi
+from .phi3_vision_4p2b import CONFIG as _phi3v
+
+ARCHS: Dict[str, ModelConfig] = {c.arch_id: c for c in [
+    _mamba2, _gemma3, _phi3, _yi6, _yi9, _whisper, _rgemma, _llama4, _kimi,
+    _phi3v]}
+
+# long_500k runs only for sub-quadratic stacks (SSM / hybrid / mostly-local);
+# whisper's decoder domain caps at its trained context — see DESIGN.md.
+LONG_OK = {"mamba2-2.7b", "recurrentgemma-2b", "gemma3-27b"}
+
+
+def get_config(arch_id: str) -> ModelConfig:
+    if arch_id not in ARCHS:
+        raise KeyError(f"unknown arch {arch_id!r}; options {sorted(ARCHS)}")
+    return ARCHS[arch_id]
+
+
+def cell_supported(arch_id: str, shape_name: str) -> Tuple[bool, str]:
+    """(runnable?, reason-if-skipped) for an (arch × shape) cell."""
+    if shape_name == "long_500k" and arch_id not in LONG_OK:
+        if arch_id == "whisper-medium":
+            return False, "enc-dec: 512k outside decoder domain (max 448)"
+        return False, "pure full-attention stack: 512k dense-KV decode excluded"
+    return True, ""
+
+
+SHAPE_GRID: List[Tuple[str, str]] = [
+    (a, s) for a in ARCHS for s in SHAPES
+]
+
+
+def smoke_config(arch_id: str) -> ModelConfig:
+    """Reduced same-family config: runs one train/serve step on CPU."""
+    full = get_config(arch_id)
+    period = len(full.layer_pattern)
+    n_layers = max(period + 1, 3)           # exercises scan + remainder
+    kv_ratio = max(full.n_heads // max(full.n_kv_heads, 1), 1)
+    n_heads = 4
+    n_kv = max(n_heads // min(kv_ratio, 4), 1)
+    return dataclasses.replace(
+        full,
+        n_layers=n_layers,
+        d_model=64, n_heads=n_heads, n_kv_heads=n_kv, head_dim=16,
+        d_ff=0 if full.ff_kind == "none" else 128,
+        vocab=512,
+        window=32, q_chunk=16, kv_chunk=32,
+        n_experts=8 if full.ff_kind == "moe" else 0,
+        top_k=min(full.top_k, 2) if full.ff_kind == "moe" else 0,
+        ssm_state=16, ssm_head_dim=16, ssm_chunk=8,
+        n_enc_layers=2 if full.enc_dec else 0,
+        enc_seq=24 if full.enc_dec else full.enc_seq,
+        n_modality_tokens=8 if full.n_modality_tokens else 0,
+        param_dtype="float32", compute_dtype="float32",
+    )

@@ -1,0 +1,13 @@
+"""gemma3-27b — 5:1 local:global attention, 128k ctx
+[hf:google/gemma-3-1b-pt family; unverified].
+62L d_model=5376 32H (GQA kv=16) d_ff=21504 vocab=262144, head_dim=128."""
+from repro.config import ModelConfig
+
+CONFIG = ModelConfig(
+    arch_id="gemma3-27b",
+    n_layers=62, d_model=5376, n_heads=32, n_kv_heads=16, head_dim=128,
+    d_ff=21504, vocab=262144,
+    layer_pattern=("attn_local",) * 5 + ("attn_global",),
+    window=1024, rope_theta=1_000_000.0,
+    source="hf:google/gemma-3 (unverified); single rope_theta simplification",
+)

@@ -1,0 +1,13 @@
+"""kimi-k2-1t-a32b — trillion-param MoE 384e top-8 (paper-table)
+[arXiv:2501.kimi2; unverified].
+61L d_model=7168 64H (kv=8) d_ff=2048/expert vocab=163840."""
+from repro.config import ModelConfig
+
+CONFIG = ModelConfig(
+    arch_id="kimi-k2-1t-a32b",
+    n_layers=61, d_model=7168, n_heads=64, n_kv_heads=8, head_dim=112,
+    d_ff=2048, vocab=163840,
+    layer_pattern=("attn",),
+    ff_kind="moe", n_experts=384, top_k=8,
+    source="arXiv:2501.kimi2 (unverified)",
+)

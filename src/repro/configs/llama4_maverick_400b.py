@@ -1,0 +1,13 @@
+"""llama4-maverick-400b-a17b — MoE 128e top-1, early fusion
+[hf:meta-llama/Llama-4 family; unverified].
+48L d_model=5120 40H (kv=8) d_ff=8192/expert vocab=202048."""
+from repro.config import ModelConfig
+
+CONFIG = ModelConfig(
+    arch_id="llama4-maverick-400b-a17b",
+    n_layers=48, d_model=5120, n_heads=40, n_kv_heads=8, head_dim=128,
+    d_ff=8192, vocab=202048,
+    layer_pattern=("attn",),
+    ff_kind="moe", n_experts=128, top_k=1,
+    source="hf:meta-llama/Llama-4-Scout-17B-16E (unverified)",
+)

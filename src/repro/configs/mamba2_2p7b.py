@@ -1,0 +1,12 @@
+"""mamba2-2.7b — SSD (state-space duality) [arXiv:2405.21060; unverified].
+64L d_model=2560, attention-free, d_ff=0, vocab=50280, ssm_state=128."""
+from repro.config import ModelConfig
+
+CONFIG = ModelConfig(
+    arch_id="mamba2-2.7b",
+    n_layers=64, d_model=2560, n_heads=80, n_kv_heads=80,
+    d_ff=0, vocab=50280,
+    layer_pattern=("mamba2",), ff_kind="none",
+    ssm_state=128, ssm_head_dim=64, ssm_expand=2, ssm_chunk=256,
+    source="arXiv:2405.21060 (unverified)",
+)

@@ -1,0 +1,11 @@
+"""phi3-mini-3.8b — RoPE SwiGLU GQA [arXiv:2404.14219; unverified].
+32L d_model=3072 32H (kv=32) d_ff=8192 vocab=32064."""
+from repro.config import ModelConfig
+
+CONFIG = ModelConfig(
+    arch_id="phi3-mini-3.8b",
+    n_layers=32, d_model=3072, n_heads=32, n_kv_heads=32,
+    d_ff=8192, vocab=32064,
+    layer_pattern=("attn",),
+    source="arXiv:2404.14219 (unverified)",
+)

@@ -1,0 +1,13 @@
+"""phi-3-vision-4.2b — phi3-mini + CLIP patch frontend STUB
+[hf:microsoft/Phi-3-vision-128k-instruct; hf].
+32L d_model=3072 32H (kv=32) d_ff=8192 vocab=32064; 576 patch tokens."""
+from repro.config import ModelConfig
+
+CONFIG = ModelConfig(
+    arch_id="phi-3-vision-4.2b",
+    n_layers=32, d_model=3072, n_heads=32, n_kv_heads=32,
+    d_ff=8192, vocab=32064,
+    layer_pattern=("attn",),
+    modality="vision", n_modality_tokens=576,
+    source="hf:microsoft/Phi-3-vision-128k-instruct (hf); frontend stubbed",
+)

@@ -1,0 +1,12 @@
+"""recurrentgemma-2b — RG-LRU + local attention, 1:2 [arXiv:2402.19427; hf].
+26L d_model=2560 10H (kv=1) d_ff=7680 vocab=256000, window 2048."""
+from repro.config import ModelConfig
+
+CONFIG = ModelConfig(
+    arch_id="recurrentgemma-2b",
+    n_layers=26, d_model=2560, n_heads=10, n_kv_heads=1, head_dim=256,
+    d_ff=7680, vocab=256000,
+    layer_pattern=("rglru", "rglru", "attn_local"),
+    window=2048,
+    source="arXiv:2402.19427 (hf)",
+)

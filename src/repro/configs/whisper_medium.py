@@ -1,0 +1,14 @@
+"""whisper-medium — enc-dec, conv frontend STUB [arXiv:2212.04356; unverified].
+24L (dec) + 24L (enc) d_model=1024 16H d_ff=4096 vocab=51865; input_specs
+provide precomputed frame embeddings [B, 1500, d_model]."""
+from repro.config import ModelConfig
+
+CONFIG = ModelConfig(
+    arch_id="whisper-medium",
+    n_layers=24, d_model=1024, n_heads=16, n_kv_heads=16,
+    d_ff=4096, vocab=51865,
+    layer_pattern=("attn",),
+    enc_dec=True, n_enc_layers=24, enc_seq=1500,
+    modality="audio",
+    source="arXiv:2212.04356 (unverified); frontend stubbed",
+)

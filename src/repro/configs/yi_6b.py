@@ -1,0 +1,11 @@
+"""yi-6b — llama-arch GQA [arXiv:2403.04652; hf].
+32L d_model=4096 32H (kv=4) d_ff=11008 vocab=64000."""
+from repro.config import ModelConfig
+
+CONFIG = ModelConfig(
+    arch_id="yi-6b",
+    n_layers=32, d_model=4096, n_heads=32, n_kv_heads=4,
+    d_ff=11008, vocab=64000,
+    layer_pattern=("attn",),
+    source="arXiv:2403.04652 (hf)",
+)

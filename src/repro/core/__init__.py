@@ -1,0 +1,33 @@
+"""The paper's contribution: parallel local graph clustering.
+
+Four diffusion engines (Nibble, PR-Nibble, HK-PR, rand-HK-PR) + evolving
+sets + the Theorem-1 work-efficient parallel sweep cut, all expressed in the
+paper's own primitive vocabulary (prefix sum / filter / sort) on fixed-
+capacity frontiers — jit/vmap/shard_map-ready.  Sequential references in
+:mod:`repro.core.seq`.
+"""
+from .frontier import Frontier, EdgeBatch, singleton, expand, pack_unique, next_pow2
+from .sweep import SweepResult, sweep_cut, sweep_cut_dense
+from .nibble import NibbleResult, nibble, nibble_fixedcap
+from .pr_nibble import PRNibbleResult, pr_nibble, pr_nibble_fixedcap
+from .pr_nibble_sparse import PRNibbleSparseResult, pr_nibble_sparse
+from .hk_pr import HKPRResult, hk_pr, hk_pr_fixedcap, psis
+from .rand_hk_pr import RandHKPRResult, rand_hk_pr, poisson_cdf_table
+from .evolving_sets import EvolvingSetsResult, evolving_sets
+from .sparsevec import SparseVec, sv_empty, sv_lookup, sv_merge_add
+from .ncp import NCPResult, ncp, ncp_batch
+from . import seq
+
+__all__ = [
+    "Frontier", "EdgeBatch", "singleton", "expand", "pack_unique", "next_pow2",
+    "SweepResult", "sweep_cut", "sweep_cut_dense",
+    "NibbleResult", "nibble", "nibble_fixedcap",
+    "PRNibbleResult", "pr_nibble", "pr_nibble_fixedcap",
+    "PRNibbleSparseResult", "pr_nibble_sparse",
+    "HKPRResult", "hk_pr", "hk_pr_fixedcap", "psis",
+    "RandHKPRResult", "rand_hk_pr", "poisson_cdf_table",
+    "EvolvingSetsResult", "evolving_sets",
+    "SparseVec", "sv_empty", "sv_lookup", "sv_merge_add",
+    "NCPResult", "ncp", "ncp_batch",
+    "seq",
+]

@@ -1,0 +1,224 @@
+"""Distributed local graph clustering — the paper's engine at pod scale.
+
+The paper targets one shared-memory node.  At 10⁹+-vertex scale the state
+vectors and the graph no longer fit one chip, so this module lifts the
+frontier-synchronous push to a *vertex-partitioned* SPMD program under
+``shard_map``:
+
+  * vertices are range-partitioned: device d owns rows
+    [d·rows_per, (d+1)·rows_per)  (graphs/partition.py);
+  * ``p``/``r`` live sharded (each device holds its slice);
+  * each round, every device expands its *local* frontier from its CSR slab,
+    producing (global dst, value) contributions;
+  * contributions are routed to their owners with a **bucketed all_to_all**:
+    sort by owner, slice per-owner buckets of static capacity, exchange,
+    local scatter-add — message volume ∝ boundary mass, the distributed
+    analogue of the paper's work-locality;
+  * termination is a replicated carried scalar (psum of frontier sizes), so
+    every device runs the same number of rounds — frontier-synchronous, like
+    the paper's rounds, with the ICI all_to_all replacing the shared memory.
+
+The same machinery drives distributed PR-Nibble here and is reused by the
+multi-pod dry-run configs (launch/dryrun.py `graph_*` cells).
+"""
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.graphs.partition import PartitionedCSR
+
+__all__ = ["DistPRNibbleResult", "dist_pr_nibble", "build_dist_pr_nibble"]
+
+
+class DistPRNibbleResult(NamedTuple):
+    p: jnp.ndarray           # f32[n_pad]  (sharded over 'data')
+    r: jnp.ndarray           # f32[n_pad]
+    iterations: jnp.ndarray  # int32 (replicated)
+    pushes: jnp.ndarray      # int32 global pushes
+    overflow: jnp.ndarray    # bool
+
+
+class _Shard(NamedTuple):
+    p: jnp.ndarray           # f32[rows_per] local slice
+    r: jnp.ndarray
+    t: jnp.ndarray           # replicated scalars
+    pushes: jnp.ndarray
+    global_front: jnp.ndarray
+    overflow: jnp.ndarray
+
+
+def _local_expand(indptr, indices, deg, f_loc, f_valid, cap_e, rows_per):
+    """Expand a local frontier (local ids) against the local CSR slab.
+    Returns (slot, dst_global, evalid, total)."""
+    degs = jnp.where(f_valid, deg[jnp.minimum(f_loc, rows_per - 1)], 0)
+    offs = jnp.cumsum(degs) - degs
+    total = offs[-1] + degs[-1]
+    j = jnp.arange(cap_e, dtype=jnp.int32)
+    slot = jnp.searchsorted(offs, j, side="right").astype(jnp.int32) - 1
+    slot = jnp.clip(slot, 0, f_loc.shape[0] - 1)
+    within = j - offs[slot]
+    evalid = j < total
+    row = jnp.minimum(f_loc[slot], rows_per - 1)
+    base = indptr[row]
+    eidx = jnp.clip(base + within, 0, indices.shape[0] - 1)
+    dst = jnp.where(evalid & f_valid[slot], indices[eidx], jnp.int32(2**30))
+    return slot, dst, evalid & f_valid[slot], total
+
+
+def build_dist_pr_nibble(mesh, axis: str = "data", exchange: str = "a2a"):
+    """Build the shard_map'd distributed PR-Nibble for a given mesh axis.
+
+    ``exchange`` selects the contribution-routing collective:
+      * "a2a"  — bucketed all_to_all (message volume ∝ boundary mass; the
+                 locality-preserving scheme, default);
+      * "psum" — naive baseline: scatter into a full dense [n] buffer and
+                 all-reduce it (O(n) bytes per round regardless of frontier
+                 size — what the roofline comparison in §Perf quantifies).
+
+    Returns fn(pg_arrays..., x, eps, alpha) -> DistPRNibbleResult, jit-able
+    with in_shardings placing the partition slabs and state on `axis`.
+    """
+    D = mesh.shape[axis]
+
+    def engine(indptr, indices, deg, x, eps, alpha, *, rows_per: int,
+               cap_f: int, cap_e: int, cap_x: int, max_iters: int):
+        """Runs INSIDE shard_map: args are per-device slabs.
+        indptr: int32[1, rows_per+1]; indices: int32[1, nnz]; deg: int32[1, rows_per]
+        x: int32 replicated seed; returns sharded p, r + replicated stats."""
+        indptr = indptr[0]
+        indices = indices[0]
+        deg = deg[0]
+        me = jax.lax.axis_index(axis)
+        base = me * rows_per
+        n_snt = jnp.int32(2**30)  # global sentinel
+
+        def local_frontier(r_loc):
+            """Local ids with r ≥ d·ε, packed to cap_f."""
+            above = (r_loc >= deg * eps) & (deg > 0)
+            cnt = jnp.sum(above).astype(jnp.int32)
+            pos = jnp.cumsum(above) - 1
+            ids = jnp.full((cap_f,), rows_per, jnp.int32).at[
+                jnp.where(above, pos, cap_f)].set(
+                jnp.arange(rows_per, dtype=jnp.int32), mode="drop")
+            return ids, jnp.minimum(cnt, cap_f), cnt > cap_f
+
+        def cond(s: _Shard):
+            return (s.global_front > 0) & (~s.overflow) & (s.t < max_iters)
+
+        def body(s: _Shard) -> _Shard:
+            f_loc, f_cnt, f_ovf = local_frontier(s.r)
+            f_valid = jnp.arange(cap_f, dtype=jnp.int32) < f_cnt
+            safe = jnp.minimum(f_loc, rows_per - 1)
+            rf = jnp.where(f_valid, s.r[safe], 0.0)
+            dv = jnp.maximum(deg[safe], 1)
+
+            # optimized update rule (Fig 4)
+            p_gain = (2.0 * alpha / (1.0 + alpha)) * rf
+            share = ((1.0 - alpha) / (1.0 + alpha)) * rf / dv
+
+            p_new = s.p.at[jnp.where(f_valid, f_loc, rows_per)].add(
+                p_gain, mode="drop")
+            r_new = s.r.at[jnp.where(f_valid, f_loc, rows_per)].set(
+                0.0, mode="drop")
+
+            slot, dst, evalid, _etot = _local_expand(
+                indptr, indices, deg, f_loc, f_valid, cap_e, rows_per)
+            contrib = jnp.where(evalid, share[slot], 0.0)
+
+            if exchange == "psum":
+                # naive baseline: dense global buffer + all-reduce
+                dense = jnp.zeros((rows_per * D,), jnp.float32)
+                dense = dense.at[jnp.where(evalid, dst, rows_per * D)].add(
+                    contrib, mode="drop")
+                dense = jax.lax.psum(dense, axis)
+                mine_slice = jax.lax.dynamic_slice_in_dim(
+                    dense, base, rows_per, 0)
+                r_new = r_new + mine_slice
+                x_ovf = jnp.asarray(False)
+            else:
+                # ---- bucketed all_to_all routing ----
+                owner = jnp.where(evalid, dst // rows_per, D)  # D = invalid
+                order = jnp.argsort(owner)
+                owner_s = owner[order]
+                dst_s = dst[order]
+                val_s = contrib[order]
+                rng_d = jnp.arange(D, dtype=jnp.int32)
+                start = jnp.searchsorted(owner_s, rng_d, side="left")
+                end = jnp.searchsorted(owner_s, rng_d, side="right")
+                count = end - start
+                x_ovf = jnp.any(count > cap_x)
+                # gather per-owner buckets [D, cap_x]
+                gidx = start[:, None] + jnp.arange(cap_x, dtype=jnp.int32)[None, :]
+                bucket_ok = jnp.arange(cap_x, dtype=jnp.int32)[None, :] < count[:, None]
+                gsafe = jnp.clip(gidx, 0, cap_e - 1)
+                send_dst = jnp.where(bucket_ok, dst_s[gsafe], n_snt)
+                send_val = jnp.where(bucket_ok, val_s[gsafe], 0.0)
+                recv_dst = jax.lax.all_to_all(send_dst, axis, 0, 0, tiled=True)
+                recv_val = jax.lax.all_to_all(send_val, axis, 0, 0, tiled=True)
+                # local scatter-add: global → local ids
+                loc = recv_dst.reshape(-1) - base
+                ok = (loc >= 0) & (loc < rows_per)
+                r_new = r_new.at[jnp.where(ok, loc, rows_per)].add(
+                    jnp.where(ok, recv_val.reshape(-1), 0.0), mode="drop")
+
+            # replicated termination stats
+            nxt_above = jnp.sum((r_new >= deg * eps) & (deg > 0))
+            gfront = jax.lax.psum(nxt_above, axis)
+            gpush = jax.lax.psum(f_cnt, axis)
+            ovf = jax.lax.psum((f_ovf | x_ovf).astype(jnp.int32), axis) > 0
+            return _Shard(p=p_new, r=r_new, t=s.t + 1,
+                          pushes=s.pushes + gpush,
+                          global_front=gfront.astype(jnp.int32),
+                          overflow=s.overflow | ovf)
+
+        # init: seed owner puts mass 1
+        r0 = jnp.zeros((rows_per,), jnp.float32)
+        mine = (x >= base) & (x < base + rows_per)
+        r0 = r0.at[jnp.clip(x - base, 0, rows_per - 1)].add(
+            jnp.where(mine, 1.0, 0.0))
+        s0 = _Shard(p=jnp.zeros((rows_per,), jnp.float32), r=r0,
+                    t=jnp.asarray(0, jnp.int32),
+                    pushes=jnp.asarray(0, jnp.int32),
+                    global_front=jnp.asarray(1, jnp.int32),
+                    overflow=jnp.asarray(False))
+        s = jax.lax.while_loop(cond, body, s0)
+        return s.p, s.r, s.t, s.pushes, s.overflow
+
+    def make(rows_per: int, cap_f: int, cap_e: int, cap_x: int,
+             max_iters: int = 10_000):
+        eng = functools.partial(engine, rows_per=rows_per, cap_f=cap_f,
+                                cap_e=cap_e, cap_x=cap_x, max_iters=max_iters)
+        smapped = jax.shard_map(
+            eng, mesh=mesh,
+            in_specs=(P(axis), P(axis), P(axis), P(), P(), P()),
+            out_specs=(P(axis), P(axis), P(), P(), P()),
+            check_vma=False)
+        return smapped
+
+    return make
+
+
+def dist_pr_nibble(pg: PartitionedCSR, mesh, x: int, eps: float = 1e-7,
+                   alpha: float = 0.01, axis: str = "data",
+                   cap_f: int = 1 << 12, cap_e: int = 1 << 16,
+                   cap_x: int = 1 << 12, max_cap_e: int = 1 << 24
+                   ) -> DistPRNibbleResult:
+    """Driver: distributed PR-Nibble (optimized rule) with bucket retry."""
+    make = build_dist_pr_nibble(mesh, axis)
+    while True:
+        fn = jax.jit(make(pg.rows_per, cap_f, cap_e, cap_x))
+        p, r, t, pushes, ovf = fn(
+            pg.indptr, pg.indices, pg.deg,
+            jnp.asarray(x, jnp.int32), jnp.float32(eps), jnp.float32(alpha))
+        if not bool(ovf) or cap_e >= max_cap_e:
+            return DistPRNibbleResult(p=p.reshape(-1), r=r.reshape(-1),
+                                      iterations=t, pushes=pushes, overflow=ovf)
+        cap_f = min(cap_f * 2, pg.rows_per + 1)
+        cap_e *= 2
+        cap_x *= 2

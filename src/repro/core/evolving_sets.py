@@ -1,0 +1,124 @@
+"""Parallel evolving sets (paper §4.6, Andersen–Peres) — for completeness.
+
+The paper implements ES sequentially, observes it is "not very useful in
+practice" as stated in [7], and sketches the parallelization: steps 1–2 are
+O(1); step 3 (S' = {v : p(v,S) ≥ Z}) is a parallel filter over S ∪ ∂S with
+prefix-sum maintenance of vol(S) and |∂(S)|.  We implement exactly that
+sketch: per round, expand S, scatter-count e(v,S), threshold against the
+random Z, repack.  Work O(B), depth O(T log n).
+"""
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.graphs.csr import CSRGraph
+from .frontier import Frontier, expand, pack_unique
+
+__all__ = ["EvolvingSetsResult", "evolving_sets"]
+
+
+class EvolvingSetsResult(NamedTuple):
+    ids: jnp.ndarray          # int32[cap_s] — members of final S (sentinel pad)
+    count: jnp.ndarray        # int32
+    conductance: jnp.ndarray  # f32
+    iterations: jnp.ndarray   # int32
+    work: jnp.ndarray         # int32 — edges traversed (cost bound B counter)
+    overflow: jnp.ndarray     # bool
+
+
+class _State(NamedTuple):
+    S: Frontier
+    x_walk: jnp.ndarray
+    key: jax.Array
+    t: jnp.ndarray
+    work: jnp.ndarray
+    cond_val: jnp.ndarray
+    done: jnp.ndarray
+    overflow: jnp.ndarray
+
+
+@functools.partial(jax.jit, static_argnums=(2, 5, 6))
+def evolving_sets(graph: CSRGraph, x, T: int, B, phi,
+                  cap_s: int = 1 << 12, cap_e: int = 1 << 16,
+                  key: jax.Array = None) -> EvolvingSetsResult:
+    if key is None:
+        key = jax.random.PRNGKey(0)
+    n, m = graph.n, graph.m
+    deg = graph.deg
+
+    def set_stats(S: Frontier):
+        """vol(S), ∂(S), φ(S) via one expansion + membership mask."""
+        svalid = S.valid()
+        sids = jnp.where(svalid, S.ids, n)
+        in_S = jnp.zeros((n + 1,), bool).at[sids].set(svalid, mode="drop")
+        eb = expand(graph, S, cap_e)
+        cut = jnp.sum(eb.valid & ~in_S[jnp.minimum(eb.dst, n)])
+        vol = jnp.sum(jnp.where(svalid, deg[jnp.minimum(sids, n - 1)], 0))
+        denom = jnp.minimum(vol, 2 * m - vol)
+        cond_val = jnp.where(denom > 0, cut / jnp.maximum(denom, 1), jnp.inf)
+        return vol, cut, cond_val, eb, in_S
+
+    def cond(s: _State):
+        return (~s.done) & (~s.overflow) & (s.t < T) & (s.work < B)
+
+    def body(s: _State) -> _State:
+        key, k_walk, k_stay, k_z = jax.random.split(s.key, 4)
+
+        # step 1: lazy walk update for x_walk
+        d_x = deg[s.x_walk]
+        off = jnp.floor(jax.random.uniform(k_walk) * d_x).astype(jnp.int32)
+        nxt = graph.indices[jnp.clip(graph.indptr[s.x_walk] + off, 0,
+                                     graph.indices.shape[0] - 1)]
+        move = (jax.random.uniform(k_stay) >= 0.5) & (d_x > 0)
+        x_walk = jnp.where(move, nxt, s.x_walk)
+
+        # e(v, S) for v ∈ S ∪ ∂S via scatter-count over S's edges
+        vol, _, _, eb, in_S = set_stats(s.S)
+        e_vS = jnp.zeros((n + 1,), jnp.int32)
+        e_vS = e_vS.at[jnp.where(eb.valid, eb.dst, n)].add(1, mode="drop")
+
+        def p_vS(v):
+            dv = jnp.maximum(deg[jnp.minimum(v, n - 1)], 1)
+            base = e_vS[jnp.minimum(v, n)] / (2.0 * dv)
+            return base + 0.5 * in_S[jnp.minimum(v, n)]
+
+        # step 2: Z ~ U[0, p(x_walk, S)]
+        z = jax.random.uniform(k_z) * p_vS(x_walk)
+
+        # step 3: S' = {v ∈ S ∪ ∂S : p(v,S) ≥ Z}  (parallel filter)
+        svalid = s.S.valid()
+        cands = jnp.concatenate([jnp.where(svalid, s.S.ids, n), eb.dst])
+        cvalid = jnp.concatenate([svalid, eb.valid])
+        keep = cvalid & (p_vS(cands) >= z) & (deg[jnp.minimum(cands, n - 1)] > 0)
+        S_new = pack_unique(cands, keep, n, cap_s)
+
+        # step 4: stop on φ(S') < φ  (T / B limits are in `cond`)
+        _, _, cond_new, eb2, _ = set_stats(S_new)
+        work = s.work + eb.total + eb2.total
+        empty = S_new.count == 0
+        return _State(
+            S=Frontier(ids=jnp.where(empty, s.S.ids, S_new.ids),
+                       count=jnp.where(empty, s.S.count, S_new.count),
+                       overflow=S_new.overflow & ~empty),
+            x_walk=x_walk, key=key, t=s.t + 1, work=work,
+            cond_val=jnp.where(empty, s.cond_val, cond_new),
+            done=(cond_new < phi) & ~empty,
+            overflow=s.overflow | (S_new.overflow & ~empty) | eb.overflow,
+        )
+
+    S0 = Frontier(ids=jnp.full((cap_s,), n, jnp.int32).at[0].set(
+        jnp.asarray(x, jnp.int32)), count=jnp.asarray(1, jnp.int32),
+        overflow=jnp.asarray(False))
+    _, _, cond0, _, _ = set_stats(S0)
+    s0 = _State(S=S0, x_walk=jnp.asarray(x, jnp.int32), key=key,
+                t=jnp.asarray(0, jnp.int32), work=jnp.asarray(0, jnp.int32),
+                cond_val=cond0, done=jnp.asarray(False),
+                overflow=jnp.asarray(False))
+    s = jax.lax.while_loop(cond, body, s0)
+    return EvolvingSetsResult(ids=s.S.ids, count=s.S.count,
+                              conductance=s.cond_val, iterations=s.t,
+                              work=s.work, overflow=s.overflow)

@@ -1,0 +1,109 @@
+"""Parallel Nibble (paper §4.2, Figure 1) — truncated lazy random walk.
+
+Frontier-synchronous rounds: each round sends half of every frontier vertex's
+mass to itself (VERTEXMAP) and half split evenly over its neighbors (EDGEMAP),
+then the new frontier is ``{v : p'[v] ≥ d(v)·ε}``.  If the new frontier is
+empty the *previous* vector is returned (paper lines 15–16).  Truncation is
+implicit: only frontier mass survives into ``p'`` (a fresh sparse set each
+round in the paper; a fresh dense vector here — see DESIGN.md §2 note on
+dense-state backends).
+
+Work O(T/ε), depth O(T log(1/ε))  (Theorem 2).
+"""
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.graphs.csr import CSRGraph
+from .frontier import Frontier, expand, pack_unique, singleton, scatter_add_dense
+
+__all__ = ["NibbleResult", "nibble", "nibble_fixedcap"]
+
+
+class NibbleResult(NamedTuple):
+    p: jnp.ndarray          # f32[n] — diffusion vector for the sweep cut
+    iterations: jnp.ndarray  # int32
+    pushes: jnp.ndarray      # int32 — total vertex pushes (work counter)
+    edge_work: jnp.ndarray   # int32 — total edges traversed
+    overflow: jnp.ndarray    # bool
+
+
+class _State(NamedTuple):
+    p: jnp.ndarray
+    frontier: Frontier
+    t: jnp.ndarray
+    pushes: jnp.ndarray
+    edge_work: jnp.ndarray
+    done: jnp.ndarray
+    overflow: jnp.ndarray
+
+
+@functools.partial(jax.jit, static_argnums=(4, 5))
+def nibble_fixedcap(graph: CSRGraph, x, eps, T,
+                    cap_f: int, cap_e: int) -> NibbleResult:
+    """One capacity bucket of parallel Nibble (jit-compiled per (cap_f, cap_e))."""
+    n = graph.n
+    deg = graph.deg
+
+    def cond(s: _State):
+        return (~s.done) & (~s.overflow) & (s.t < T)
+
+    def body(s: _State) -> _State:
+        f = s.frontier
+        fvalid = f.valid()
+        fids = jnp.where(fvalid, f.ids, n)
+        safe = jnp.minimum(fids, n - 1)
+        pf = jnp.where(fvalid, s.p[safe], 0.0)
+        dv = jnp.maximum(deg[safe], 1)
+
+        # VERTEXMAP: p'[v] = p[v]/2   (fresh p' each round — truncation)
+        p_new = jnp.zeros_like(s.p)
+        p_new = scatter_add_dense(p_new, fids, pf * 0.5, fvalid)
+
+        # EDGEMAP: p'[w] += p[v] / (2 d(v)) for every (v, w)
+        eb = expand(graph, f, cap_e)
+        contrib = pf[eb.slot] / (2.0 * dv[eb.slot])
+        p_new = scatter_add_dense(p_new, eb.dst, contrib, eb.valid)
+
+        # new frontier = {v in F ∪ N(F) : p'[v] ≥ d(v) ε}
+        cands = jnp.concatenate([fids, eb.dst])
+        cvalid = jnp.concatenate([fvalid, eb.valid])
+        csafe = jnp.minimum(cands, n - 1)
+        keep = cvalid & (deg[csafe] > 0) & (p_new[csafe] >= deg[csafe] * eps)
+        nf = pack_unique(cands, keep, n, cap_f)
+
+        empty = nf.count == 0
+        return _State(
+            p=jnp.where(empty, s.p, p_new),     # return p_{i-1} on empty
+            frontier=nf,
+            t=s.t + 1,
+            pushes=s.pushes + f.count,
+            edge_work=s.edge_work + eb.total,
+            done=empty,
+            overflow=s.overflow | nf.overflow | eb.overflow,
+        )
+
+    p0 = jnp.zeros((n,), jnp.float32).at[x].set(1.0)
+    s0 = _State(p=p0, frontier=singleton(x, n, cap_f),
+                t=jnp.asarray(0, jnp.int32), pushes=jnp.asarray(0, jnp.int32),
+                edge_work=jnp.asarray(0, jnp.int32), done=jnp.asarray(False),
+                overflow=jnp.asarray(False))
+    s = jax.lax.while_loop(cond, body, s0)
+    return NibbleResult(p=s.p, iterations=s.t, pushes=s.pushes,
+                        edge_work=s.edge_work, overflow=s.overflow)
+
+
+def nibble(graph: CSRGraph, x, eps: float = 1e-8, T: int = 20,
+           cap_f: int = 1 << 12, cap_e: int = 1 << 16,
+           max_cap_e: int = 1 << 26) -> NibbleResult:
+    """Bucketed driver: retry with doubled capacities on overflow."""
+    while True:
+        out = nibble_fixedcap(graph, x, eps, T, cap_f, cap_e)
+        if not bool(out.overflow) or cap_e >= max_cap_e:
+            return out
+        cap_f = min(cap_f * 2, graph.n + 1)
+        cap_e = cap_e * 2

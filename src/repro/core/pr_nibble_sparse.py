@@ -1,0 +1,110 @@
+"""PR-Nibble with true sparse-set state (paper-faithful memory profile).
+
+Same algorithm as :mod:`repro.core.pr_nibble` but ``p`` and ``r`` are
+:class:`SparseVec` sort-merge sparse sets instead of dense f32[n] vectors:
+memory is O(cap_v) = O(|support|), independent of n — the claim that makes
+the algorithms "local" in the paper.  Used to cross-check the dense backend
+and to serve billion-vertex graphs where even one dense f32[n] per query is
+wasteful.
+"""
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.graphs.csr import CSRGraph
+from .frontier import Frontier, expand, pack_unique, singleton
+from .sparsevec import (SparseVec, sv_empty, sv_from_pairs, sv_lookup,
+                        sv_merge_add, sv_update_existing)
+
+__all__ = ["PRNibbleSparseResult", "pr_nibble_sparse"]
+
+
+class PRNibbleSparseResult(NamedTuple):
+    p: SparseVec
+    r: SparseVec
+    iterations: jnp.ndarray
+    pushes: jnp.ndarray
+    overflow: jnp.ndarray
+
+
+class _State(NamedTuple):
+    p: SparseVec
+    r: SparseVec
+    frontier: Frontier
+    t: jnp.ndarray
+    pushes: jnp.ndarray
+    overflow: jnp.ndarray
+
+
+@functools.partial(jax.jit, static_argnums=(4, 5, 6, 7, 8))
+def pr_nibble_sparse_fixedcap(graph: CSRGraph, x, eps, alpha,
+                              optimized: bool, cap_f: int, cap_e: int,
+                              cap_v: int, max_iters: int = 10_000
+                              ) -> PRNibbleSparseResult:
+    n = graph.n
+    deg = graph.deg
+
+    def cond(s: _State):
+        return (s.frontier.count > 0) & (~s.overflow) & (s.t < max_iters)
+
+    def body(s: _State) -> _State:
+        f = s.frontier
+        fvalid = f.valid()
+        fids = jnp.where(fvalid, f.ids, n)
+        safe = jnp.minimum(fids, n - 1)
+        rf = jnp.where(fvalid, sv_lookup(s.r, fids, n), 0.0)
+        dv = jnp.maximum(deg[safe], 1)
+
+        if optimized:
+            p_gain = (2.0 * alpha / (1.0 + alpha)) * rf
+            r_self = jnp.zeros_like(rf)
+            share = ((1.0 - alpha) / (1.0 + alpha)) * rf / dv
+        else:
+            p_gain = alpha * rf
+            r_self = (1.0 - alpha) * rf / 2.0
+            share = (1.0 - alpha) * rf / (2.0 * dv)
+
+        p_new = sv_merge_add(s.p, fids, p_gain, fvalid, n)
+        r_new = sv_update_existing(s.r, fids, r_self, fvalid)
+        eb = expand(graph, f, cap_e)
+        r_new = sv_merge_add(r_new, eb.dst, share[eb.slot], eb.valid, n)
+
+        cands = jnp.concatenate([fids, eb.dst])
+        cvalid = jnp.concatenate([fvalid, eb.valid])
+        csafe = jnp.minimum(cands, n - 1)
+        r_cand = sv_lookup(r_new, cands, n)
+        keep = cvalid & (deg[csafe] > 0) & (r_cand >= deg[csafe] * eps)
+        nf = pack_unique(cands, keep, n, cap_f)
+
+        return _State(p=p_new, r=r_new, frontier=nf, t=s.t + 1,
+                      pushes=s.pushes + f.count,
+                      overflow=(s.overflow | nf.overflow | eb.overflow |
+                                p_new.overflow | r_new.overflow))
+
+    r0 = sv_from_pairs(jnp.full((1,), jnp.asarray(x, jnp.int32)),
+                       jnp.ones((1,), jnp.float32),
+                       jnp.ones((1,), bool), cap_v, n)
+    s0 = _State(p=sv_empty(cap_v, n), r=r0, frontier=singleton(x, n, cap_f),
+                t=jnp.asarray(0, jnp.int32), pushes=jnp.asarray(0, jnp.int32),
+                overflow=jnp.asarray(False))
+    s = jax.lax.while_loop(cond, body, s0)
+    return PRNibbleSparseResult(p=s.p, r=s.r, iterations=s.t, pushes=s.pushes,
+                                overflow=s.overflow)
+
+
+def pr_nibble_sparse(graph: CSRGraph, x, eps: float = 1e-7, alpha: float = 0.01,
+                     optimized: bool = True, cap_f: int = 1 << 10,
+                     cap_e: int = 1 << 14, cap_v: int = 1 << 12,
+                     max_cap_e: int = 1 << 26) -> PRNibbleSparseResult:
+    while True:
+        out = pr_nibble_sparse_fixedcap(graph, x, eps, alpha, optimized,
+                                        cap_f, cap_e, cap_v)
+        if not bool(out.overflow) or cap_e >= max_cap_e:
+            return out
+        cap_f = min(cap_f * 2, graph.n + 1)
+        cap_e *= 2
+        cap_v = min(cap_v * 2, graph.n + 1)

@@ -1,0 +1,242 @@
+"""Sequential reference implementations (the paper's baselines).
+
+Faithful host-side numpy ports of the *sequential* algorithms exactly as the
+paper describes them (queue-based PR-Nibble §4.3, queue-of-(v,j) HK-PR §4.4,
+walk-at-a-time rand-HK-PR §4.5, incremental sweep §4.1).  They serve as
+
+  1. the "sequential" column of Table 1 / Table 3 reproductions, and
+  2. correctness oracles for the parallel JAX engines.
+
+Dict-backed sparse sets stand in for STL ``unordered_map``.
+"""
+from __future__ import annotations
+
+import collections
+import math
+from typing import Dict, Tuple
+
+import numpy as np
+
+from repro.graphs.csr import CSRGraph
+
+__all__ = ["seq_sweep_cut", "seq_nibble", "seq_pr_nibble", "seq_hk_pr",
+           "seq_rand_hk_pr", "seq_evolving_sets", "conductance_of_set"]
+
+
+def _adj(graph: CSRGraph):
+    g = graph.to_numpy()
+    return g.indptr, g.indices, g.deg, g.n, g.m
+
+
+def conductance_of_set(graph: CSRGraph, S) -> float:
+    indptr, indices, deg, n, m = _adj(graph)
+    Sset = set(int(v) for v in S)
+    vol = sum(int(deg[v]) for v in Sset)
+    cut = 0
+    for v in Sset:
+        for w in indices[indptr[v]: indptr[v + 1]]:
+            if int(w) not in Sset:
+                cut += 1
+    denom = min(vol, 2 * m - vol)
+    return cut / denom if denom > 0 else math.inf
+
+
+def seq_sweep_cut(graph: CSRGraph, p: Dict[int, float]):
+    """§4.1 sequential sweep: sort by p/d desc, incremental ∂(S), vol(S)."""
+    indptr, indices, deg, n, m = _adj(graph)
+    items = [(v, val) for v, val in p.items() if val > 0 and deg[v] > 0]
+    items.sort(key=lambda kv: (-kv[1] / deg[kv[0]], kv[0]))
+    S = set()
+    vol = 0
+    cut = 0
+    best = (math.inf, 0, 0)  # (conductance, prefix length, volume)
+    conds = []
+    for i, (v, _) in enumerate(items):
+        for w in indices[indptr[v]: indptr[v + 1]]:
+            cut += -1 if int(w) in S else 1
+        S.add(v)
+        vol += int(deg[v])
+        denom = min(vol, 2 * m - vol)
+        cond = cut / denom if denom > 0 else math.inf
+        conds.append(cond)
+        if cond < best[0]:
+            best = (cond, i + 1, vol)
+    order = [v for v, _ in items]
+    return dict(best_conductance=best[0], best_size=best[1],
+                best_volume=best[2], order=order, conductance=conds,
+                cluster=order[: best[1]])
+
+
+def seq_nibble(graph: CSRGraph, x: int, eps: float, T: int):
+    """§4.2: truncated lazy random walk.  (The parallel algorithm applies the
+    same updates, so this is also the parallel oracle.)"""
+    indptr, indices, deg, n, m = _adj(graph)
+    p = {int(x): 1.0}
+    iters = 0
+    pushes = 0
+    for _ in range(T):
+        frontier = [v for v, pv in p.items() if pv >= deg[v] * eps]
+        if not frontier:
+            break
+        p_new: Dict[int, float] = collections.defaultdict(float)
+        for v in frontier:
+            pv = p[v]
+            p_new[v] += pv / 2
+            share = pv / (2 * deg[v])
+            for w in indices[indptr[v]: indptr[v + 1]]:
+                p_new[int(w)] += share
+            pushes += 1
+        iters += 1
+        nxt_frontier = [v for v, pv in p_new.items() if pv >= deg[v] * eps]
+        if not nxt_frontier:
+            break  # return p_{i-1}? paper: break leaving p as previous round
+        p = dict(p_new)
+    return dict(p=p, iterations=iters, pushes=pushes)
+
+
+def seq_pr_nibble(graph: CSRGraph, x: int, eps: float, alpha: float,
+                  optimized: bool = True, max_pushes: int = 10**9):
+    """§4.3: queue-based sequential PR-Nibble, both update rules."""
+    indptr, indices, deg, n, m = _adj(graph)
+    p: Dict[int, float] = collections.defaultdict(float)
+    r: Dict[int, float] = collections.defaultdict(float)
+    r[int(x)] = 1.0
+    q = collections.deque([int(x)])
+    inq = {int(x)}
+    pushes = 0
+    while q and pushes < max_pushes:
+        v = q.popleft()
+        inq.discard(v)
+        # "We repeatedly push from v until it is below the threshold."  With
+        # the optimized rule r[v] becomes 0 after one push, so the loop runs
+        # once; with the original rule it halves until below threshold.
+        while deg[v] > 0 and r[v] >= deg[v] * eps and pushes < max_pushes:
+            rv = r[v]
+            if optimized:
+                p[v] += (2 * alpha / (1 + alpha)) * rv
+                share = ((1 - alpha) / (1 + alpha)) * rv / deg[v]
+                r[v] = 0.0
+            else:
+                p[v] += alpha * rv
+                share = (1 - alpha) * rv / (2 * deg[v])
+                r[v] = (1 - alpha) * rv / 2
+            for w in indices[indptr[v]: indptr[v + 1]]:
+                w = int(w)
+                r[w] += share
+                if deg[w] > 0 and r[w] >= deg[w] * eps and w not in inq:
+                    q.append(w)
+                    inq.add(w)
+            pushes += 1
+    return dict(p=dict(p), r=dict(r), pushes=pushes)
+
+
+def _psis(N: int, t: float) -> np.ndarray:
+    """ψ_k = Σ_{m=0}^{N-k} k! t^m/(m+k)!  via ψ_N = 1, ψ_k = 1 + t·ψ_{k+1}/(k+1)."""
+    psi = np.ones(N + 1, dtype=np.float64)
+    for k in range(N - 1, -1, -1):
+        psi[k] = 1.0 + t * psi[k + 1] / (k + 1)
+    return psi
+
+
+def seq_hk_pr(graph: CSRGraph, x: int, N: int, eps: float, t: float,
+              truncate: bool = True):
+    """§4.4: Kloster–Gleich deterministic heat-kernel push (queue of (v,j)).
+
+    Threshold follows Figure 5 / Kloster–Gleich: an entry (w, j+1) enters the
+    queue when r[(w,j+1)] crosses eᵗ·ε·d(w) / (2N·ψ_{j+1}(t)).  With
+    ``truncate=False`` the full degree-N Taylor recurrence is applied (the
+    ε→0 oracle).
+    """
+    indptr, indices, deg, n, m = _adj(graph)
+    psi = _psis(N, t)
+    p: Dict[int, float] = collections.defaultdict(float)
+    r: Dict[Tuple[int, int], float] = collections.defaultdict(float)
+    r[(int(x), 0)] = 1.0
+    q = collections.deque([(int(x), 0)])
+    pushes = 0
+    scale = math.exp(t)
+    while q:
+        v, j = q.popleft()
+        rv = r.pop((v, j), 0.0)
+        if rv == 0.0 or deg[v] == 0:
+            continue
+        p[v] += rv
+        pushes += 1
+        if j + 1 == N:
+            share = rv / deg[v]
+            for w in indices[indptr[v]: indptr[v + 1]]:
+                p[int(w)] += share
+            continue
+        M = t * rv / ((j + 1) * deg[v])
+        for w in indices[indptr[v]: indptr[v + 1]]:
+            w = int(w)
+            thresh = scale * eps * deg[w] / (2 * N * psi[j + 1])
+            old = r[(w, j + 1)]
+            if truncate:
+                if old < thresh and old + M >= thresh:
+                    q.append((w, j + 1))
+            else:
+                if old == 0.0:
+                    q.append((w, j + 1))
+            r[(w, j + 1)] = old + M
+    return dict(p=dict(p), pushes=pushes)
+
+
+def seq_rand_hk_pr(graph: CSRGraph, x: int, N: int, K: int, t: float,
+                   seed: int = 0):
+    """§4.5: N random walks, length ~ Poisson(t) truncated at K; p[v] counts
+    walks ending at v; returned vector is p/N."""
+    indptr, indices, deg, n, m = _adj(graph)
+    rng = np.random.default_rng(seed)
+    # truncated Poisson(t) CDF table over 0..K
+    pmf = np.array([math.exp(-t) * t ** k / math.factorial(k) for k in range(K + 1)])
+    pmf[-1] += max(0.0, 1.0 - pmf.sum())
+    cdf = np.cumsum(pmf / pmf.sum())
+    p: Dict[int, float] = collections.defaultdict(float)
+    for _ in range(N):
+        k = int(np.searchsorted(cdf, rng.random()))
+        v = int(x)
+        for _step in range(k):
+            if deg[v] == 0:
+                break
+            v = int(indices[indptr[v] + rng.integers(deg[v])])
+        p[v] += 1.0
+    return dict(p={v: c / N for v, c in p.items()})
+
+
+def seq_evolving_sets(graph: CSRGraph, x: int, T: int, B: int, phi: float,
+                      seed: int = 0):
+    """§4.6: Andersen–Peres evolving sets (sequential, sparse sets)."""
+    indptr, indices, deg, n, m = _adj(graph)
+    rng = np.random.default_rng(seed)
+    S = {int(x)}
+    x_walk = int(x)
+    work = 0
+    history = []
+    for t_iter in range(T):
+        # 1. lazy walk step
+        if rng.random() >= 0.5 and deg[x_walk] > 0:
+            x_walk = int(indices[indptr[x_walk] + rng.integers(deg[x_walk])])
+        # e(v, S) for v in S ∪ ∂S
+        e_vS: Dict[int, int] = collections.defaultdict(int)
+        for u in S:
+            for w in indices[indptr[u]: indptr[u + 1]]:
+                e_vS[int(w)] += 1
+            work += int(deg[u])
+        cands = set(e_vS) | S
+
+        def p_vS(v):
+            base = e_vS.get(v, 0) / (2 * deg[v]) if deg[v] > 0 else 0.0
+            return base + (0.5 if v in S else 0.0)
+
+        # 2–3. threshold update
+        z = rng.random() * p_vS(x_walk)
+        S = {v for v in cands if p_vS(v) >= z and deg[v] > 0}
+        if not S:
+            S = {int(x)}
+        cond = conductance_of_set(graph, S)
+        history.append((len(S), cond))
+        if cond < phi or work > B:
+            break
+    return dict(S=sorted(S), conductance=conductance_of_set(graph, S),
+                work=work, history=history)

@@ -1,0 +1,102 @@
+"""Sort-merge sparse vectors — the TPU-native replacement for the paper's
+concurrent hash table (§3 "Sparse Sets").
+
+The paper stores (vertex → value) in a lock-free linear-probing hash table;
+its complexity analysis only needs batched insert/lookup in O(N) work and
+O(log N) depth.  On a TPU random probing is hostile, but *sort* is a native
+primitive — so a sparse set here is a sorted, sentinel-padded
+``(ids, vals)`` pair:
+
+  * lookup  — ``searchsorted`` (O(log cap) per query, vectorized)
+  * merge-add — concatenate + sort + adjacent-segment-sum + compaction
+    (O((cap+U) log) work, O(log) depth for U updates — the same bounds as a
+    batch of hash inserts, and deterministic)
+
+Capacity is static per jit bucket; exceeding it raises the overflow flag and
+the driver retries one bucket up (see frontier.py).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["SparseVec", "sv_empty", "sv_lookup", "sv_merge_add",
+           "sv_update_existing", "sv_from_pairs"]
+
+
+class SparseVec(NamedTuple):
+    ids: jnp.ndarray       # int32[cap] — sorted; sentinel (n) padded
+    vals: jnp.ndarray      # f32[cap]
+    count: jnp.ndarray     # int32
+    overflow: jnp.ndarray  # bool
+
+    @property
+    def cap(self) -> int:
+        return self.ids.shape[0]
+
+    def valid(self) -> jnp.ndarray:
+        return jnp.arange(self.cap, dtype=jnp.int32) < self.count
+
+
+def sv_empty(cap: int, n: int) -> SparseVec:
+    return SparseVec(ids=jnp.full((cap,), n, jnp.int32),
+                     vals=jnp.zeros((cap,), jnp.float32),
+                     count=jnp.asarray(0, jnp.int32),
+                     overflow=jnp.asarray(False))
+
+
+def sv_from_pairs(ids, vals, valid, cap: int, n: int) -> SparseVec:
+    """Build from (possibly duplicated / unsorted) pairs: duplicates summed."""
+    return sv_merge_add(sv_empty(cap, n), ids, vals, valid, n)
+
+
+def sv_lookup(sv: SparseVec, queries: jnp.ndarray, n: int) -> jnp.ndarray:
+    """vals for each query id; 0.0 where absent (the paper's ⊥ = 0)."""
+    pos = jnp.searchsorted(sv.ids, queries)
+    pos = jnp.clip(pos, 0, sv.cap - 1)
+    hit = (sv.ids[pos] == queries) & (queries < n)
+    return jnp.where(hit, sv.vals[pos], 0.0)
+
+
+def sv_update_existing(sv: SparseVec, ids, new_vals, valid) -> SparseVec:
+    """Overwrite values of keys already present (no structural change)."""
+    pos = jnp.clip(jnp.searchsorted(sv.ids, ids), 0, sv.cap - 1)
+    hit = valid & (sv.ids[pos] == ids)
+    vals = sv.vals.at[jnp.where(hit, pos, sv.cap)].set(
+        jnp.where(hit, new_vals, 0.0), mode="drop")
+    return sv._replace(vals=vals)
+
+
+def sv_merge_add(sv: SparseVec, upd_ids, upd_vals, upd_valid, n: int) -> SparseVec:
+    """`r[w] += delta` for a batch of updates — the fetchAdd batch.
+
+    Concatenate the live entries with the updates, sort by id, sum adjacent
+    duplicates (segment-sum over cumsum-group ids), compact back to `cap`.
+    """
+    cap = sv.cap
+    u = upd_ids.shape[0]
+    tot = cap + u
+    ids_all = jnp.concatenate([
+        jnp.where(sv.valid(), sv.ids, n),
+        jnp.where(upd_valid, upd_ids, n).astype(jnp.int32)])
+    vals_all = jnp.concatenate([
+        jnp.where(sv.valid(), sv.vals, 0.0),
+        jnp.where(upd_valid, upd_vals, 0.0)])
+    order = jnp.argsort(ids_all)
+    ids_s = ids_all[order]
+    vals_s = vals_all[order]
+    first = jnp.concatenate([jnp.array([True]), ids_s[1:] != ids_s[:-1]])
+    group = jnp.cumsum(first) - 1                      # group id per slot
+    sums = jax.ops.segment_sum(vals_s, group, num_segments=tot)
+    sel = first & (ids_s < n)
+    pos = jnp.cumsum(sel) - 1
+    new_count = jnp.sum(sel).astype(jnp.int32)
+    out_ids = jnp.full((cap,), n, jnp.int32).at[
+        jnp.where(sel, pos, cap)].set(ids_s, mode="drop")
+    out_vals = jnp.zeros((cap,), jnp.float32).at[
+        jnp.where(sel, pos, cap)].set(sums[group], mode="drop")
+    return SparseVec(ids=out_ids, vals=out_vals,
+                     count=jnp.minimum(new_count, cap),
+                     overflow=sv.overflow | (new_count > cap))

@@ -1,0 +1,141 @@
+"""Compressed-sparse-row graph container used by every layer of the framework.
+
+The paper (§3) studies undirected, unweighted graphs with vertices indexed
+``0..n-1``.  We store the symmetrized adjacency in CSR form:
+
+  * ``indptr``  : int32[n+1]   row offsets
+  * ``indices`` : int32[2m]    neighbor lists (both directions of every edge)
+  * ``deg``     : int32[n]     degrees (== indptr[1:] - indptr[:-1])
+
+Construction is host-side numpy (it happens once, at load time); the arrays are
+then moved to device and treated as read-only.  All per-query work is done by
+the fixed-capacity frontier machinery in :mod:`repro.core.frontier`, which only
+*gathers* from these arrays — the TPU-native analogue of Ligra's EdgeMap.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["CSRGraph", "build_csr", "from_edge_list", "load_edge_file", "ell_pack"]
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass(frozen=True)
+class CSRGraph:
+    """Immutable device-resident CSR graph (undirected, unweighted)."""
+
+    indptr: jnp.ndarray   # int32[n+1]
+    indices: jnp.ndarray  # int32[2m]  (padded tail allowed; see `num_directed`)
+    deg: jnp.ndarray      # int32[n]
+    n: int                # static number of vertices
+    m: int                # static number of *undirected* edges
+
+    # -- pytree protocol (n, m static so the graph can cross jit boundaries) --
+    def tree_flatten(self):
+        return (self.indptr, self.indices, self.deg), (self.n, self.m)
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        indptr, indices, deg = children
+        n, m = aux
+        return cls(indptr=indptr, indices=indices, deg=deg, n=n, m=m)
+
+    # -- convenience ---------------------------------------------------------
+    @property
+    def num_directed(self) -> int:
+        return 2 * self.m
+
+    @property
+    def total_volume(self) -> int:
+        """vol(V) = 2m for an undirected graph."""
+        return 2 * self.m
+
+    def degree(self, v) -> jnp.ndarray:
+        return self.deg[v]
+
+    def neighbors_np(self, v: int) -> np.ndarray:
+        """Host-side neighbor list (tests / sequential references)."""
+        ip = np.asarray(self.indptr)
+        idx = np.asarray(self.indices)
+        return idx[ip[v]: ip[v + 1]]
+
+    def to_numpy(self) -> "CSRGraph":
+        return CSRGraph(
+            indptr=np.asarray(self.indptr),
+            indices=np.asarray(self.indices),
+            deg=np.asarray(self.deg),
+            n=self.n,
+            m=self.m,
+        )
+
+
+def build_csr(edges: np.ndarray, n: int) -> CSRGraph:
+    """Build a symmetric CSR from an ``(e, 2)`` int array of undirected edges.
+
+    Self-loops and duplicate edges are removed, matching the paper's
+    preprocessing ("We removed all self and duplicate edges from the graphs").
+    """
+    edges = np.asarray(edges, dtype=np.int64).reshape(-1, 2)
+    # drop self loops
+    edges = edges[edges[:, 0] != edges[:, 1]]
+    # canonical order then dedupe
+    lo = np.minimum(edges[:, 0], edges[:, 1])
+    hi = np.maximum(edges[:, 0], edges[:, 1])
+    key = lo * n + hi
+    _, first = np.unique(key, return_index=True)
+    lo, hi = lo[first], hi[first]
+    m = lo.shape[0]
+    # symmetrize
+    src = np.concatenate([lo, hi])
+    dst = np.concatenate([hi, lo])
+    order = np.argsort(src, kind="stable")
+    src, dst = src[order], dst[order]
+    deg = np.bincount(src, minlength=n).astype(np.int32)
+    indptr = np.zeros(n + 1, dtype=np.int32)
+    np.cumsum(deg, out=indptr[1:])
+    return CSRGraph(
+        indptr=jnp.asarray(indptr),
+        indices=jnp.asarray(dst.astype(np.int32)),
+        deg=jnp.asarray(deg),
+        n=int(n),
+        m=int(m),
+    )
+
+
+def from_edge_list(src, dst, n: Optional[int] = None) -> CSRGraph:
+    src = np.asarray(src)
+    dst = np.asarray(dst)
+    if n is None:
+        n = int(max(src.max(initial=-1), dst.max(initial=-1)) + 1)
+    return build_csr(np.stack([src, dst], axis=1), n)
+
+
+def load_edge_file(path: str, n: Optional[int] = None) -> CSRGraph:
+    """Load a whitespace edge list (SNAP format; '#' comments ignored)."""
+    edges = np.loadtxt(path, dtype=np.int64, comments="#").reshape(-1, 2)
+    if n is None:
+        n = int(edges.max() + 1)
+    return build_csr(edges, n)
+
+
+def ell_pack(graph: CSRGraph, width: Optional[int] = None):
+    """ELLPACK view: ``nbr[n, width]`` padded with ``n`` (sentinel), plus mask.
+
+    Used by the Pallas push kernel: a rectangular layout turns the irregular
+    CSR gather into dense VMEM tiles.  ``width`` defaults to the max degree —
+    callers working with power-law graphs should pass an explicit width and
+    route overflow rows through the CSR path (`hybrid` mode in ops.py).
+    """
+    g = graph.to_numpy()
+    w = int(g.deg.max()) if width is None else int(width)
+    nbr = np.full((g.n, w), g.n, dtype=np.int32)
+    for v in range(g.n):
+        row = g.indices[g.indptr[v]: g.indptr[v + 1]][:w]
+        nbr[v, : row.shape[0]] = row
+    return jnp.asarray(nbr), w

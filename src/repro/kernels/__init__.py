@@ -1,0 +1,16 @@
+"""Pallas TPU kernels for the paper's compute hot-spots.
+
+  ell_spmv      — banded ELL SpMV (saturated diffusion round), one-hot MXU gather
+  scatter_accum — sort-bucketed scatter-add (fetchAdd → systolic contraction)
+  prefix_scan   — two-phase blocked prefix sum (sweep-cut backbone)
+
+``ops`` holds the jit'd layout wrappers, ``ref`` the pure-jnp oracles.
+Kernels compile for TPU; on CPU they run under ``interpret=True``.
+"""
+from . import ops, ref
+from .ell_spmv import band_spmv, ROW_BLOCK
+from .scatter_accum import scatter_accum_tiles, TILE
+from .prefix_scan import block_scan, BLOCK
+
+__all__ = ["ops", "ref", "band_spmv", "ROW_BLOCK", "scatter_accum_tiles",
+           "TILE", "block_scan", "BLOCK"]

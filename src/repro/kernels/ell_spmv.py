@@ -1,0 +1,103 @@
+"""Banded ELL SpMV Pallas kernel — the saturated-diffusion hot loop on TPU.
+
+When a diffusion's frontier saturates (tiny ε / NCP sweeps on well-connected
+graphs), each round approaches the full product p' = M·p with
+M = (A·D⁻¹ + I)/2 (paper §4.2 footnote 2).  On a CPU that is Ligra's EdgeMap
+over all vertices; on a TPU the natural formulation is a *blocked ELL SpMV*:
+
+  * rows are packed ELL: ``nbr[n, W]`` neighbor ids, sentinel-padded;
+  * graphs with locality (randLocal / 3D-grid — the paper's synthetic
+    families — or any graph after a locality reordering) are **banded**:
+    neighbors of row block i fall within ``halo`` blocks of the diagonal;
+  * grid = (row_block i, band offset δ ∈ [0, 2·halo]): step (i, δ) loads the
+    single 128-wide ``p`` block (i + δ − halo) into VMEM and gathers neighbor
+    values with a **one-hot MXU contraction** — the TPU replacement for
+    irregular loads: instead of B·W random accesses, a (B·W × B) one-hot
+    matmul on the systolic array.  The output block is revisited across δ
+    (δ is the fastest grid dimension ⇒ legal sequential accumulation).
+
+Rows whose neighbors escape the band go through the CSR fallback in ops.py
+(hybrid split: ELL kernel for the band, XLA scatter for escapers).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+__all__ = ["band_spmv", "ROW_BLOCK"]
+
+ROW_BLOCK = 128
+
+
+def _band_spmv_kernel(nbr_ref, w_ref, p_ref, out_ref, *, halo: int,
+                      nblocks: int):
+    i = pl.program_id(0)
+    d = pl.program_id(1)
+    B = out_ref.shape[0]
+    W = nbr_ref.shape[1]
+
+    tgt = i + d - halo                       # p block this step is assigned
+    visit_ok = (tgt >= 0) & (tgt < nblocks)  # clipped duplicates are skipped
+    start = jnp.clip(tgt, 0, nblocks - 1) * B
+
+    nbr = nbr_ref[...]                       # int32[B, W] global neighbor ids
+    wgt = w_ref[...]                         # f32 [B, W]
+    pblk = p_ref[...]                        # f32 [B] — p[start : start+B]
+
+    local = nbr - start
+    ok = (local >= 0) & (local < B) & visit_ok
+    local = jnp.clip(local, 0, B - 1)
+
+    # one-hot gather on the MXU: (B·W, B) @ (B, 1)
+    iota = jax.lax.broadcasted_iota(jnp.int32, (B * W, B), 1)
+    onehot = (iota == local.reshape(B * W, 1)).astype(jnp.float32)
+    onehot = onehot * ok.reshape(B * W, 1).astype(jnp.float32)
+    gathered = jax.lax.dot_general(
+        onehot, pblk.reshape(B, 1), (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32).reshape(B, W)
+    partial = jnp.sum(gathered * wgt, axis=1)
+
+    @pl.when(d == 0)
+    def _init():
+        out_ref[...] = partial
+
+    @pl.when(d != 0)
+    def _acc():
+        out_ref[...] += partial
+
+
+@functools.partial(jax.jit, static_argnames=("halo", "interpret"))
+def band_spmv(nbr: jnp.ndarray, weights: jnp.ndarray, p: jnp.ndarray,
+              halo: int = 1, interpret: bool = False) -> jnp.ndarray:
+    """y[v] = Σ_k weights[v,k] · p[nbr[v,k]] for banded ELL tables.
+
+    Args:
+      nbr:     int32[n_pad, W] ELL neighbor ids (n_pad multiple of 128);
+               out-of-band / padding entries must carry weight 0.
+      weights: f32[n_pad, W]   per-edge weights (e.g. 1/(2 d(src)))
+      p:       f32[n_pad]
+      halo:    band radius in 128-row blocks.
+    """
+    n_pad, W = nbr.shape
+    assert n_pad % ROW_BLOCK == 0, "pad rows to a multiple of 128"
+    nblocks = n_pad // ROW_BLOCK
+    grid = (nblocks, 2 * halo + 1)
+
+    def p_index(i, d):
+        return (jnp.clip(i + d - halo, 0, nblocks - 1),)
+
+    return pl.pallas_call(
+        functools.partial(_band_spmv_kernel, halo=halo, nblocks=nblocks),
+        out_shape=jax.ShapeDtypeStruct((n_pad,), jnp.float32),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((ROW_BLOCK, W), lambda i, d: (i, 0)),
+            pl.BlockSpec((ROW_BLOCK, W), lambda i, d: (i, 0)),
+            pl.BlockSpec((ROW_BLOCK,), p_index),
+        ],
+        out_specs=pl.BlockSpec((ROW_BLOCK,), lambda i, d: (i,)),
+        interpret=interpret,
+    )(nbr, weights, p)

@@ -1,0 +1,123 @@
+"""jit'd public wrappers around the Pallas kernels.
+
+These own the layout work (ELL packing, sort-and-bucket, padding) so callers
+deal in graph/CSR terms; on non-TPU backends they flip ``interpret=True``
+automatically (the kernels execute in the Pallas interpreter for parity
+testing — TPU is the compile target).
+"""
+from __future__ import annotations
+
+import functools
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from .ell_spmv import band_spmv, ROW_BLOCK
+from .scatter_accum import scatter_accum_tiles, TILE
+from .prefix_scan import block_scan, BLOCK
+
+__all__ = ["on_tpu", "diffusion_spmv", "scatter_add_via_mxu", "prefix_sum",
+           "pack_banded_ell"]
+
+
+def on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def _interp() -> bool:
+    return not on_tpu()
+
+
+def pack_banded_ell(graph, halo: int = 1, coef: float = 0.5):
+    """Split a CSR graph into (banded-ELL part, escaper COO part).
+
+    Band-resident edges (|block(src) − block(dst)| ≤ halo) go to the ELL
+    table consumed by the kernel; the rest go to a COO list handled by an
+    XLA scatter — the hybrid layout described in ell_spmv.py.
+
+    The kernel *gathers*: y[v] = Σ_k wgt[v,k]·p[nbr[v,k]], so the diffusion
+    push into v along edge (w → v) carries weight coef/d(w) — the
+    **neighbor's** degree (coef=0.5 for the lazy-walk half-push).  Gather
+    over the symmetric adjacency is exactly the push accumulation, without
+    any scatter in the hot path.
+    """
+    g = graph.to_numpy()
+    n = g.n
+    n_pad = -(-n // ROW_BLOCK) * ROW_BLOCK
+    src = np.repeat(np.arange(n), g.deg)
+    dst = g.indices[: 2 * g.m]
+    in_band = np.abs(src // ROW_BLOCK - dst // ROW_BLOCK) <= halo
+    # ELL width = max band-degree
+    band_deg = np.bincount(src[in_band], minlength=n_pad).astype(np.int64)
+    W = max(int(band_deg.max()), 1)
+    nbr = np.full((n_pad, W), n_pad, dtype=np.int32)
+    wgt = np.zeros((n_pad, W), dtype=np.float32)
+    slot = np.zeros(n_pad, dtype=np.int64)
+    bs, bd = src[in_band], dst[in_band]
+    for s, d in zip(bs, bd):
+        nbr[s, slot[s]] = d
+        wgt[s, slot[s]] = coef / g.deg[d]   # neighbor's degree: push d → s
+        slot[s] += 1
+    esc_src = src[~in_band].astype(np.int32)
+    esc_dst = dst[~in_band].astype(np.int32)
+    esc_w = (coef / g.deg[esc_dst]).astype(np.float32)
+    return (jnp.asarray(nbr), jnp.asarray(wgt),
+            jnp.asarray(esc_src), jnp.asarray(esc_dst), jnp.asarray(esc_w),
+            n_pad, W)
+
+
+@functools.partial(jax.jit, static_argnames=("halo",))
+def diffusion_spmv(nbr, wgt, esc_src, esc_dst, esc_w, p, halo: int = 1):
+    """One saturated diffusion product y = coef·(A D⁻¹)p on the hybrid layout:
+    banded ELL via the Pallas kernel + escaper COO via XLA scatter."""
+    y = band_spmv(nbr, wgt, p, halo=halo, interpret=_interp())
+    contrib = esc_w * p[esc_dst]            # gather semantics: pull d → s
+    return y.at[esc_src].add(contrib)
+
+
+def scatter_add_via_mxu(vec: jnp.ndarray, idx: jnp.ndarray, vals: jnp.ndarray,
+                        chunk: int = 256) -> jnp.ndarray:
+    """Dense scatter-add through the sort-bucket-MXU pipeline.
+
+    Sorts (idx, vals) by destination, buckets into 128-wide tiles with a
+    fixed per-tile chunk, runs the Pallas accumulation kernel, and adds the
+    tile updates back with one contiguous reshape — semantically equal to
+    ``vec.at[idx].add(vals)`` (ref: kernels/ref.py::scatter_accum_ref).
+
+    Per-tile overflow (more than ``chunk`` contributions landing in one
+    tile) falls back to XLA scatter for the overflowing remainder.
+    """
+    n = vec.shape[0]
+    n_pad = -(-n // TILE) * TILE
+    T = n_pad // TILE
+    order = jnp.argsort(idx)
+    idx_s = idx[order]
+    vals_s = vals[order]
+    tile_id = jnp.clip(idx_s // TILE, 0, T - 1)
+    # rank within tile: position - first position of tile
+    first_pos = jnp.searchsorted(tile_id, jnp.arange(T), side="left")
+    rank = jnp.arange(idx.shape[0]) - first_pos[tile_id]
+    ok = (idx_s >= 0) & (idx_s < n) & (rank < chunk)
+    flat = tile_id * chunk + rank
+    local = jnp.full((T * chunk,), -1, jnp.int32).at[
+        jnp.where(ok, flat, T * chunk)].set(
+        (idx_s % TILE).astype(jnp.int32), mode="drop")
+    v = jnp.zeros((T * chunk,), jnp.float32).at[
+        jnp.where(ok, flat, T * chunk)].set(vals_s, mode="drop")
+    tiles = scatter_accum_tiles(local.reshape(T, chunk), v.reshape(T, chunk),
+                                interpret=_interp())
+    out = vec + tiles.reshape(-1)[:n]
+    # overflow remainder via XLA scatter (rare; correctness-preserving)
+    spill = (~ok) & (idx_s >= 0) & (idx_s < n)
+    out = out.at[jnp.where(spill, idx_s, n)].add(
+        jnp.where(spill, vals_s, 0.0), mode="drop")
+    return out
+
+
+def prefix_sum(x: jnp.ndarray) -> jnp.ndarray:
+    """Inclusive prefix sum via the blocked Pallas scan (auto-padded)."""
+    n = x.shape[0]
+    n_pad = -(-n // BLOCK) * BLOCK
+    xp = jnp.pad(x.astype(jnp.float32), (0, n_pad - n))
+    return block_scan(xp, interpret=_interp())[:n]

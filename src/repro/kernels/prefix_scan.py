@@ -1,0 +1,69 @@
+"""Blocked prefix-sum Pallas kernel — the sweep cut's backbone.
+
+Prefix sum is one of the paper's three foundational primitives (§3) and the
+core of Theorem 1's sweep cut (cut sizes, volumes, and the final prefix-min
+are all scans).  XLA lowers ``cumsum`` to O(n log n) shifted adds or a
+serialized loop; this kernel is the classic two-phase work-efficient scan
+mapped to TPU VMEM blocks:
+
+  phase 1 — per-block inclusive scan + block total   (this kernel, grid pass)
+  phase 2 — tiny exclusive scan of block totals      (jnp on <= grid elems)
+  phase 3 — add block offsets                        (this kernel again)
+
+Work O(n), depth O(log n) — Blelloch's bounds, realized with VMEM-resident
+blocks of 8·128 lanes × UNROLL rows.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+__all__ = ["block_scan", "BLOCK"]
+
+BLOCK = 2048  # elements per VMEM block (16 sublane rows × 128 lanes)
+
+
+def _scan_block_kernel(x_ref, y_ref, tot_ref):
+    x = x_ref[...]
+    y = jnp.cumsum(x)
+    y_ref[...] = y
+    tot_ref[0] = y[-1]
+
+
+def _add_offsets_kernel(y_ref, off_ref, out_ref):
+    out_ref[...] = y_ref[...] + off_ref[0]
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def block_scan(x: jnp.ndarray, interpret: bool = False) -> jnp.ndarray:
+    """Inclusive prefix sum of f32[n] (n multiple of BLOCK)."""
+    n = x.shape[0]
+    assert n % BLOCK == 0, f"pad input to a multiple of {BLOCK}"
+    nb = n // BLOCK
+
+    y, totals = pl.pallas_call(
+        _scan_block_kernel,
+        out_shape=(jax.ShapeDtypeStruct((n,), x.dtype),
+                   jax.ShapeDtypeStruct((nb,), x.dtype)),
+        grid=(nb,),
+        in_specs=[pl.BlockSpec((BLOCK,), lambda i: (i,))],
+        out_specs=(pl.BlockSpec((BLOCK,), lambda i: (i,)),
+                   pl.BlockSpec((1,), lambda i: (i,))),
+        interpret=interpret,
+    )(x)
+
+    # phase 2: exclusive scan of the nb block totals (tiny)
+    offsets = jnp.cumsum(totals) - totals
+
+    return pl.pallas_call(
+        _add_offsets_kernel,
+        out_shape=jax.ShapeDtypeStruct((n,), x.dtype),
+        grid=(nb,),
+        in_specs=[pl.BlockSpec((BLOCK,), lambda i: (i,)),
+                  pl.BlockSpec((1,), lambda i: (i,))],
+        out_specs=pl.BlockSpec((BLOCK,), lambda i: (i,)),
+        interpret=interpret,
+    )(y, offsets)

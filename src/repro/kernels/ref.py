@@ -1,0 +1,47 @@
+"""Pure-jnp oracles for every Pallas kernel (the correctness contracts).
+
+Each function computes the same mathematical object as its kernel with plain
+jax.numpy — no tiling, no VMEM reasoning — and is what the per-kernel
+shape/dtype sweep tests assert against (``tests/test_kernels.py``).
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+__all__ = ["band_spmv_ref", "scatter_accum_ref", "block_scan_ref",
+           "spmv_csr_ref"]
+
+
+def band_spmv_ref(nbr: jnp.ndarray, weights: jnp.ndarray,
+                  p: jnp.ndarray) -> jnp.ndarray:
+    """y[v] = Σ_k weights[v,k] · p[nbr[v,k]]; sentinel ids carry weight 0."""
+    n = p.shape[0]
+    safe = jnp.clip(nbr, 0, n - 1)
+    vals = p[safe] * (nbr < n) * (nbr >= 0)
+    return jnp.sum(vals * weights, axis=1)
+
+
+def scatter_accum_ref(local: jnp.ndarray, vals: jnp.ndarray,
+                      tile: int = 128) -> jnp.ndarray:
+    """out[t, c] = Σ_j vals[t, j] · [local[t, j] == c]."""
+    T, C = local.shape
+    out = jnp.zeros((T, tile), jnp.float32)
+    ok = (local >= 0) & (local < tile)
+    t_idx = jnp.repeat(jnp.arange(T), C)
+    c_idx = jnp.where(ok, local, 0).reshape(-1)
+    v = jnp.where(ok, vals, 0.0).reshape(-1)
+    return out.at[t_idx, c_idx].add(v)
+
+
+def block_scan_ref(x: jnp.ndarray) -> jnp.ndarray:
+    return jnp.cumsum(x)
+
+
+def spmv_csr_ref(indptr, indices, deg, p, coef: float = 0.5):
+    """Dense reference for the full diffusion matrix–vector product
+    p' = coef·(A D⁻¹)p (+ the self term added by the caller)."""
+    n = deg.shape[0]
+    out = jnp.zeros_like(p)
+    src = jnp.repeat(jnp.arange(n), deg, total_repeat_length=indices.shape[0])
+    contrib = coef * p[src] / jnp.maximum(deg[src], 1)
+    return out.at[indices].add(contrib)

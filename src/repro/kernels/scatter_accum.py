@@ -1,0 +1,68 @@
+"""Sorted-bucket scatter-add Pallas kernel — fetchAdd on the MXU.
+
+The paper replaces sequential updates with atomic ``fetchAdd``; XLA replaces
+atomics with ``scatter-add``.  On TPU, scatter lowers to a serialized update
+loop — the hot-spot the paper's algorithms hammer hardest (every EDGEMAP ends
+in one).  This kernel restructures it:
+
+  1. (wrapper, ops.py) sort contributions by destination, bucket them into
+     128-wide destination tiles, pad each bucket to a fixed chunk ``C``;
+  2. (kernel) for each tile: build the (C × 128) one-hot of local offsets and
+     accumulate ``vals[1, C] @ onehot[C, 128]`` on the MXU — turning O(C)
+     serialized memory updates into one systolic contraction.
+
+Duplicate destinations need no special casing: their one-hot rows share a
+column and the matmul sums them — exactly the associativity argument the
+paper uses for fetchAdd.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+__all__ = ["scatter_accum_tiles", "TILE"]
+
+TILE = 128
+
+
+def _scatter_kernel(local_ref, vals_ref, out_ref):
+    """One destination tile: out[128] = Σ_j vals[j] · onehot(local[j])."""
+    C = local_ref.shape[1]
+    local = local_ref[0, :]                 # int32[C] in [0, 128) or -1 (pad)
+    vals = vals_ref[0, :]                   # f32[C]
+    iota = jax.lax.broadcasted_iota(jnp.int32, (C, TILE), 1)
+    onehot = (iota == local.reshape(C, 1)).astype(jnp.float32)
+    acc = jax.lax.dot_general(
+        vals.reshape(1, C), onehot, (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)
+    out_ref[0, :] = acc.reshape(TILE)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def scatter_accum_tiles(local: jnp.ndarray, vals: jnp.ndarray,
+                        interpret: bool = False) -> jnp.ndarray:
+    """Per-tile accumulation.
+
+    Args:
+      local: int32[T, C] — local destination offsets (0..127) within each of
+             T tiles; padding entries must be -1 (or any value outside 0..127).
+      vals:  f32[T, C]   — contribution values (0 at padding).
+    Returns:
+      f32[T, 128] — accumulated tile updates (caller adds into the dense
+      vector with one contiguous reshape-add).
+    """
+    T, C = local.shape
+    return pl.pallas_call(
+        _scatter_kernel,
+        out_shape=jax.ShapeDtypeStruct((T, TILE), jnp.float32),
+        grid=(T,),
+        in_specs=[
+            pl.BlockSpec((1, C), lambda i: (i, 0)),
+            pl.BlockSpec((1, C), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, TILE), lambda i: (i, 0)),
+        interpret=interpret,
+    )(local, vals)

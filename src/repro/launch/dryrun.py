@@ -1,0 +1,280 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# ^ MUST precede any jax-importing module: jax locks the device count on
+# first init.  Only the dry-run sees 512 placeholder devices.
+
+"""Multi-pod dry-run: .lower().compile() every (arch × shape × mesh) cell.
+
+For every cell this
+  1. builds the FULL-size model abstractly (jax.eval_shape — no allocation),
+  2. jits the step (train_step incl. optimizer / prefill / decode) with
+     explicit in/out shardings on the production mesh,
+  3. lowers + compiles, prints memory_analysis / cost_analysis,
+  4. extracts the three roofline terms (launch/roofline.py) and writes
+     experiments/dryrun/<arch>__<shape>__<mesh>[__<variant>].json.
+
+Sharding bugs, compile-time OOM, and unsupported collectives fail HERE —
+that is the point.  Results are cached by cell key; --force recomputes.
+
+Usage:
+  python -m repro.launch.dryrun --arch yi-6b --shape train_4k --mesh pod
+  python -m repro.launch.dryrun --all --mesh both
+  python -m repro.launch.dryrun --graph        # paper-engine cells
+"""
+import argparse
+import json
+import time
+import traceback
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.config import SHAPES
+from repro.configs import ARCHS, get_config, cell_supported
+from repro.models import build_model, batch_axes
+from repro.models.model import make_batch_specs
+from repro.train import AdamWConfig, make_train_step, adamw_init
+from repro.launch.mesh import make_production_mesh
+from repro.launch.roofline import roofline_report, HW
+
+OUT_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "..",
+                       "experiments", "dryrun")
+
+# hillclimb variants (see EXPERIMENTS.md §Perf)
+VARIANTS = ("base", "remat_none", "zero1", "seqshard", "int8grads",
+            "fsdp", "flat_batch", "moe_local", "fsdp_zero1", "combined")
+
+
+def _shard(mesh, spec_tree):
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), spec_tree)
+
+
+def _batch_shardings(batch_sds, bspec, mesh):
+    def one(path, leaf):
+        nd = len(leaf.shape)
+        return NamedSharding(mesh, P(bspec, *(None,) * (nd - 1)))
+    return jax.tree_util.tree_map_with_path(one, batch_sds)
+
+
+def lower_cell(arch: str, shape_name: str, mesh, variant: str = "base"):
+    """Returns (lowered, compiled, meta) for one cell."""
+    cfg = get_config(arch)
+    if variant in ("moe_local", "combined"):
+        import dataclasses as _dc
+        cfg = _dc.replace(cfg, moe_per_row=True)
+    shape = SHAPES[shape_name]
+    chips = mesh.devices.size
+    remat = shape.kind == "train" and variant != "remat_none"
+    model = build_model(cfg, remat=remat)
+    bspec = batch_axes(shape.global_batch, mesh)
+    if variant == "flat_batch" and bspec is not None:
+        # fold model axis into batch sharding when batch allows (pure DP)
+        pass
+
+    params_sds = model.abstract_params()
+    pspecs = model.param_partition_specs(mesh)
+    if variant in ("fsdp", "fsdp_zero1", "combined"):
+        # ZeRO-3-flavored: additionally shard params over data on their
+        # largest replicated dim
+        from repro.train.optimizer import zero_shard_specs
+        pspecs = zero_shard_specs(pspecs, params_sds, mesh, axis="data")
+    pshard = _shard(mesh, pspecs)
+    model_flops_coef = 6.0 if shape.kind == "train" else 2.0
+    n_active = cfg.active_param_count()
+    tokens_global = shape.global_batch * (shape.seq_len if shape.kind != "decode"
+                                          else 1)
+    model_flops = model_flops_coef * n_active * tokens_global
+
+    if shape.kind == "train":
+        opt_sds = jax.eval_shape(adamw_init, params_sds)
+        ospecs = type(opt_sds)(mu=pspecs, nu=pspecs, count=P())
+        if variant in ("zero1", "fsdp", "fsdp_zero1", "combined"):
+            from repro.train.optimizer import zero_shard_specs
+            ospecs = type(opt_sds)(
+                mu=zero_shard_specs(pspecs, params_sds, mesh, "data"),
+                nu=zero_shard_specs(pspecs, params_sds, mesh, "data"),
+                count=P())
+        oshard = _shard(mesh, ospecs)
+        batch_sds = make_batch_specs(cfg, shape)
+        bshard = _batch_shardings(batch_sds, bspec, mesh)
+        ocfg = AdamWConfig(
+            compress_grads="int8" if variant == "int8grads" else None)
+        step = make_train_step(model, ocfg)
+        fn = jax.jit(step, in_shardings=(pshard, oshard, bshard),
+                     out_shardings=(pshard, oshard, None),
+                     donate_argnums=(0, 1))
+        lowered = fn.lower(params_sds, opt_sds, batch_sds)
+    elif shape.kind == "prefill":
+        batch_sds = make_batch_specs(cfg, shape)
+        bshard = _batch_shardings(batch_sds, bspec, mesh)
+        fn = jax.jit(model.prefill_fn, in_shardings=(pshard, bshard))
+        lowered = fn.lower(params_sds, batch_sds)
+    else:  # decode
+        cache_sds = model.abstract_cache(shape.global_batch, shape.seq_len)
+        cspecs = model.cache_partition_specs(shape.global_batch,
+                                             shape.seq_len, mesh)
+        if variant == "seqshard":
+            cspecs = _seqshard_cache(cspecs, cache_sds, mesh)
+        cshard = _shard(mesh, cspecs)
+        tok_sds = jax.ShapeDtypeStruct((shape.global_batch, 1), jnp.int32)
+        tshard = NamedSharding(mesh, P(bspec, None))
+        fn = jax.jit(model.decode_fn, in_shardings=(pshard, tshard, cshard),
+                     out_shardings=(None, cshard), donate_argnums=(2,))
+        lowered = fn.lower(params_sds, tok_sds, cache_sds)
+
+    meta = dict(arch=arch, shape=shape_name, chips=chips, variant=variant,
+                model_flops=model_flops, n_active_params=n_active,
+                n_total_params=cfg.param_count(),
+                tokens_per_step=tokens_global, kind=shape.kind)
+    return lowered, meta
+
+
+def _seqshard_cache(cspecs, cache_sds, mesh):
+    """Hillclimb variant: shard the KV-cache sequence dim over `data`
+    (long-context decode with batch=1 — see §Perf)."""
+    def one(spec, leaf):
+        t = tuple(spec)
+        shape = leaf.shape
+        if len(shape) >= 4 and len(t) == len(shape):
+            # k/v caches: [..., B, S, Kv|None, Dh]; seq dim = -3
+            d = len(shape) - 3
+            if shape[d] % mesh.shape["data"] == 0 and t[d] is None \
+                    and shape[d] >= 4096:
+                t = t[:d] + ("data",) + t[d + 1:]
+        return P(*t)
+    return jax.tree.map(one, cspecs, cache_sds)
+
+
+def run_cell(arch: str, shape_name: str, mesh_name: str,
+             variant: str = "base", force: bool = False, out_dir=None):
+    out_dir = out_dir or OUT_DIR
+    os.makedirs(out_dir, exist_ok=True)
+    key = f"{arch}__{shape_name}__{mesh_name}" + \
+        (f"__{variant}" if variant != "base" else "")
+    path = os.path.join(out_dir, key + ".json")
+    if os.path.exists(path) and not force:
+        with open(path) as f:
+            return json.load(f)
+    ok, reason = cell_supported(arch, shape_name)
+    if not ok:
+        rec = dict(cell=key, skipped=True, reason=reason)
+        with open(path, "w") as f:
+            json.dump(rec, f, indent=1)
+        print(f"[skip] {key}: {reason}", flush=True)
+        return rec
+
+    mesh = make_production_mesh(multi_pod=(mesh_name == "multipod"))
+    t0 = time.time()
+    try:
+        lowered, meta = lower_cell(arch, shape_name, mesh, variant)
+        t_lower = time.time() - t0
+        t0 = time.time()
+        compiled = lowered.compile()
+        t_compile = time.time() - t0
+        mem = compiled.memory_analysis()
+        print(f"[{key}] memory_analysis: {mem}", flush=True)
+        ca = compiled.cost_analysis()
+        print(f"[{key}] cost: flops={ca.get('flops', 0):.3e} "
+              f"bytes={ca.get('bytes accessed', 0):.3e}", flush=True)
+        rep = roofline_report(compiled, chips=meta["chips"],
+                              model_flops=meta["model_flops"])
+        for dup in ("num_chips", "model_flops"):
+            rep.pop(dup, None)
+        rec = dict(cell=key, skipped=False, **meta, **rep,
+                   lower_s=round(t_lower, 2), compile_s=round(t_compile, 2))
+        with open(path, "w") as f:
+            json.dump(rec, f, indent=1)
+        print(f"[ok] {key}: bottleneck={rep['bottleneck']} "
+              f"compute={rep['compute_s']*1e3:.2f}ms "
+              f"mem={rep['memory_s']*1e3:.2f}ms "
+              f"coll={rep['collective_s']*1e3:.2f}ms "
+              f"roofline_frac={rep.get('roofline_fraction', 0):.3f} "
+              f"(lower {t_lower:.0f}s compile {t_compile:.0f}s)", flush=True)
+        return rec
+    except Exception as e:
+        rec = dict(cell=key, skipped=False, error=str(e)[:2000],
+                   traceback=traceback.format_exc()[-4000:])
+        with open(path, "w") as f:
+            json.dump(rec, f, indent=1)
+        print(f"[FAIL] {key}: {e}", flush=True)
+        return rec
+
+
+def run_graph_cells(mesh_name: str, force: bool = False, out_dir=None,
+                    exchange: str = "a2a"):
+    """Dry-run the paper engine itself: distributed PR-Nibble on the
+    production mesh (vertex-partitioned; data axis = 256/512-way).
+    ``exchange``: "a2a" (bucketed, locality-aware) or "psum" (naive dense
+    all-reduce baseline) — the §Perf comparison for the paper's technique."""
+    out_dir = out_dir or OUT_DIR
+    os.makedirs(out_dir, exist_ok=True)
+    key = f"graph_pr_nibble__n64M__{mesh_name}__{exchange}"
+    path = os.path.join(out_dir, key + ".json")
+    if os.path.exists(path) and not force:
+        with open(path) as f:
+            return json.load(f)
+    mesh = make_production_mesh(multi_pod=(mesh_name == "multipod"))
+    from repro.core.distributed import build_dist_pr_nibble
+    D = mesh.devices.size
+    rows_per = (1 << 26) // D          # 64M-vertex graph
+    nnz_per = rows_per * 16            # avg degree 16
+    make = build_dist_pr_nibble(
+        jax.make_mesh((D,), ("data",),
+                      axis_types=(jax.sharding.AxisType.Auto,)), "data",
+        exchange=exchange)
+    fn = jax.jit(make(rows_per, 1 << 14, 1 << 18, 1 << 12))
+    sds = (
+        jax.ShapeDtypeStruct((D, rows_per + 1), jnp.int32),
+        jax.ShapeDtypeStruct((D, nnz_per), jnp.int32),
+        jax.ShapeDtypeStruct((D, rows_per), jnp.int32),
+        jax.ShapeDtypeStruct((), jnp.int32),
+        jax.ShapeDtypeStruct((), jnp.float32),
+        jax.ShapeDtypeStruct((), jnp.float32),
+    )
+    t0 = time.time()
+    try:
+        lowered = fn.lower(*sds)
+        compiled = lowered.compile()
+        print(f"[{key}] memory: {compiled.memory_analysis()}", flush=True)
+        rep = roofline_report(compiled, chips=D, model_flops=None)
+        rec = dict(cell=key, skipped=False, chips=D, **rep,
+                   compile_s=round(time.time() - t0, 2))
+    except Exception as e:
+        rec = dict(cell=key, skipped=False, error=str(e)[:2000])
+        print(f"[FAIL] {key}: {e}", flush=True)
+    with open(path, "w") as f:
+        json.dump(rec, f, indent=1)
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--mesh", default="pod", choices=["pod", "multipod", "both"])
+    ap.add_argument("--variant", default="base")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--graph", action="store_true")
+    ap.add_argument("--force", action="store_true")
+    ap.add_argument("--out", default=None)
+    args = ap.parse_args()
+
+    meshes = ["pod", "multipod"] if args.mesh == "both" else [args.mesh]
+    if args.graph:
+        for m in meshes:
+            for ex in ("a2a", "psum"):
+                run_graph_cells(m, args.force, args.out, exchange=ex)
+        return
+    archs = [args.arch] if args.arch else list(ARCHS)
+    shapes = [args.shape] if args.shape else list(SHAPES)
+    if not (args.all or args.arch or args.shape):
+        ap.error("pass --all, or --arch/--shape")
+    for m in meshes:
+        for a in archs:
+            for s in shapes:
+                run_cell(a, s, m, args.variant, args.force, args.out)
+
+
+if __name__ == "__main__":
+    main()

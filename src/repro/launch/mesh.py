@@ -1,0 +1,27 @@
+"""Production mesh definitions.
+
+``make_production_mesh`` is a FUNCTION (importing this module never touches
+jax device state): 16×16 = 256 chips per pod with axes (data, model), and the
+2-pod 512-chip variant with a leading "pod" axis.  The dry-run launcher sets
+``XLA_FLAGS=--xla_force_host_platform_device_count=512`` before any jax
+import; nothing else in the repo does (tests and benches see 1 device).
+"""
+from __future__ import annotations
+
+import jax
+
+__all__ = ["make_production_mesh", "make_host_mesh"]
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(
+        shape, axes, axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+
+
+def make_host_mesh(shape=(8,), axes=("data",)):
+    """Small host-device mesh for distributed tests (subprocess with
+    --xla_force_host_platform_device_count=8)."""
+    return jax.make_mesh(
+        shape, axes, axis_types=(jax.sharding.AxisType.Auto,) * len(axes))

@@ -1,0 +1,160 @@
+"""Roofline-term extraction from a compiled (dry-run) executable.
+
+Three terms per (arch × shape × mesh) cell, all PER-CHIP (XLA cost analysis
+reports the post-SPMD per-device module — verified against a hand-counted
+sharded matmul):
+
+    compute_s    = HLO_FLOPs_per_chip      / peak_FLOPs      (197 TF/s bf16)
+    memory_s     = HLO_bytes_per_chip      / HBM_bw          (819 GB/s)
+    collective_s = collective_bytes_per_chip / link_bw       (~50 GB/s/link)
+
+``collective_bytes`` is not in cost_analysis: we parse the optimized HLO,
+build an instruction→shape table, and sum operand bytes of every
+all-gather / all-reduce / reduce-scatter / all-to-all / collective-permute
+(the brief's definition).  An effective ring-model estimate
+(×2(g−1)/g for all-reduce etc.) is also recorded for reference.
+
+MODEL_FLOPS uses 6·N·D for training steps and 2·N·D for inference steps
+(N = active params, D = global tokens); the ratio MODEL_FLOPS/HLO_FLOPs
+exposes remat recompute and dispatch overheads.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Dict, Optional
+
+__all__ = ["HW", "collective_bytes", "roofline_report"]
+
+
+@dataclasses.dataclass(frozen=True)
+class HW:
+    peak_flops: float = 197e12      # bf16 per chip (TPU v5e-class)
+    hbm_bw: float = 819e9           # bytes/s per chip
+    link_bw: float = 50e9           # bytes/s per ICI link
+    hbm_bytes: float = 16e9         # capacity per chip
+
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "token": 0, "f8e4m3fn": 1, "f8e5m2": 1, "s4": 1, "u4": 1,
+}
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_INSTR_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%?([\w\.\-]+)\s*=\s*(\([^=]*?\)|\S+)\s+([\w\-]+)", re.M)
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+
+def _shape_bytes(shape_str: str) -> int:
+    """Total bytes of an HLO shape string (handles tuples)."""
+    total = 0
+    for m in _SHAPE_RE.finditer(shape_str):
+        dt, dims = m.group(1), m.group(2)
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def collective_bytes(hlo_text: str) -> Dict[str, float]:
+    """Sum operand bytes per collective kind from optimized HLO text."""
+    # instruction name -> result shape string
+    shapes: Dict[str, str] = {}
+    for m in _INSTR_RE.finditer(hlo_text):
+        shapes[m.group(1)] = m.group(2)
+
+    out = {k: 0.0 for k in _COLLECTIVES}
+    out_effective = {k: 0.0 for k in _COLLECTIVES}
+    group_re = re.compile(r"replica_groups=\{?\{([\d,]+)\}")
+    for line in hlo_text.splitlines():
+        m = _INSTR_RE.match(line)
+        if not m:
+            continue
+        op = m.group(3)
+        base = None
+        for c in _COLLECTIVES:
+            if op == c or op.startswith(c + "-start") or op == c + "-done":
+                base = c
+                break
+        if base is None or op.endswith("-done"):
+            continue
+        # operand names inside parens
+        paren = line[line.find("(") + 1: line.rfind(")")]
+        opnd_names = re.findall(r"%?([\w\.\-]+)", paren)
+        obytes = 0
+        for name in opnd_names:
+            if name in shapes:
+                obytes += _shape_bytes(shapes[name])
+        if obytes == 0:
+            # fall back to result shape (covers inline-typed operand format)
+            obytes = _shape_bytes(m.group(2))
+            if base == "all-gather":
+                gm = group_re.search(line)
+                if gm:
+                    g = len(gm.group(1).split(","))
+                    obytes = obytes // max(g, 1)
+        out[base] += obytes
+        # ring-model effective bytes
+        gm = group_re.search(line)
+        g = len(gm.group(1).split(",")) if gm else 2
+        frac = (g - 1) / max(g, 1)
+        eff = {"all-reduce": 2 * frac, "all-gather": frac,
+               "reduce-scatter": frac, "all-to-all": frac,
+               "collective-permute": 1.0}[base]
+        out_effective[base] += obytes * eff
+    out["total"] = sum(out[k] for k in _COLLECTIVES)
+    out["total_effective"] = sum(out_effective[k] for k in _COLLECTIVES)
+    return out
+
+
+def roofline_report(compiled, *, hw: HW = HW(), chips: int,
+                    model_flops: Optional[float] = None,
+                    hlo_text: Optional[str] = None) -> Dict:
+    from .hlocost import analyze_hlo
+    ca = compiled.cost_analysis()
+    text = hlo_text if hlo_text is not None else compiled.as_text()
+    # trip-count-aware walker (hlocost.py): XLA's cost_analysis counts scan
+    # bodies once; the walker multiplies by known_trip_count.
+    walk = analyze_hlo(text)
+    flops = float(walk.flops)
+    bytes_accessed = float(walk.bytes)
+    mem = compiled.memory_analysis()
+    report = {
+        "per_chip_flops": flops,
+        "per_chip_bytes": bytes_accessed,
+        "xla_cost_flops_unscaled": float(ca.get("flops", 0.0)),
+        "xla_cost_bytes_unscaled": float(ca.get("bytes accessed", 0.0)),
+        "collective_bytes": float(walk.collective_bytes),
+        "collective_breakdown": dict(walk.collective_breakdown),
+        "dynamic_trip_loops": walk.dynamic_loops,
+        "compute_s": flops / hw.peak_flops,
+        "memory_s": bytes_accessed / hw.hbm_bw,
+        "collective_s": float(walk.collective_bytes) / hw.link_bw,
+        "argument_bytes": mem.argument_size_in_bytes,
+        "output_bytes": mem.output_size_in_bytes,
+        "temp_bytes": mem.temp_size_in_bytes,
+        "alias_bytes": mem.alias_size_in_bytes,
+        # donated outputs alias inputs — don't double count them
+        "peak_hbm_frac": (mem.argument_size_in_bytes +
+                          mem.temp_size_in_bytes +
+                          mem.output_size_in_bytes -
+                          mem.alias_size_in_bytes) / hw.hbm_bytes,
+        "num_chips": chips,
+    }
+    terms = {k: report[k] for k in ("compute_s", "memory_s", "collective_s")}
+    report["bottleneck"] = max(terms, key=terms.get)
+    report["step_time_lower_bound_s"] = max(terms.values())
+    if model_flops:
+        report["model_flops"] = model_flops
+        report["useful_flops_ratio"] = model_flops / max(flops * chips, 1.0)
+        report["roofline_fraction"] = (
+            (model_flops / chips / hw.peak_flops) /
+            max(report["step_time_lower_bound_s"], 1e-30))
+    return report

@@ -1,0 +1,68 @@
+"""Serving launcher: ``python -m repro.launch.serve --arch <id> ...``
+
+Loads (or initializes) a model, then serves a synthetic request stream
+through the continuous-batching engine — the serving counterpart of
+launch/train.py.  Use --smoke for the CPU-sized config.
+"""
+import argparse
+import os
+import time
+
+
+def _early_args():
+    ap = argparse.ArgumentParser(add_help=False)
+    ap.add_argument("--devices", type=int, default=0)
+    args, _ = ap.parse_known_args()
+    if args.devices:
+        os.environ["XLA_FLAGS"] = (
+            f"--xla_force_host_platform_device_count={args.devices}")
+
+
+_early_args()
+
+import numpy as np  # noqa: E402
+import jax  # noqa: E402
+
+from repro.configs import get_config, smoke_config  # noqa: E402
+from repro.models import build_model  # noqa: E402
+from repro.train import latest_step, load_pytree  # noqa: E402
+from repro.serve import ServeConfig, batched_serve  # noqa: E402
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--requests", type=int, default=16)
+    ap.add_argument("--batch-slots", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=32)
+    ap.add_argument("--max-new", type=int, default=16)
+    ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--devices", type=int, default=0)
+    args = ap.parse_args()
+
+    cfg = smoke_config(args.arch) if args.smoke else get_config(args.arch)
+    model = build_model(cfg, remat=False)
+    params = model.init_fn(jax.random.PRNGKey(0))
+    if args.ckpt_dir and latest_step(args.ckpt_dir) is not None:
+        restored, step = load_pytree({"params": params}, args.ckpt_dir)
+        params = restored["params"]
+        print(f"restored params from step {step}")
+
+    rng = np.random.default_rng(0)
+    requests = [rng.integers(0, cfg.vocab,
+                             size=rng.integers(4, args.prompt_len))
+                for _ in range(args.requests)]
+    t0 = time.perf_counter()
+    outs = batched_serve(model, params, requests,
+                         batch_slots=args.batch_slots,
+                         cfg=ServeConfig(max_new_tokens=args.max_new),
+                         prompt_len=args.prompt_len)
+    dt = time.perf_counter() - t0
+    toks = sum(len(o) for o in outs)
+    print(f"{len(requests)} requests, {toks} tokens in {dt:.2f}s "
+          f"({toks / dt:.1f} tok/s)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,96 @@
+"""Training launcher: ``python -m repro.launch.train --arch <id> ...``
+
+Runs a real training loop (CPU-sized by default via --smoke) with the full
+production plumbing: deterministic sharded data, jit'd train step, async
+checkpointing, heartbeat, resume-from-latest.  ``--devices N`` requests N
+host devices (must be set before jax init, hence the env fiddle at top).
+"""
+import argparse
+import os
+import sys
+
+
+def _early_args():
+    ap = argparse.ArgumentParser(add_help=False)
+    ap.add_argument("--devices", type=int, default=0)
+    args, _ = ap.parse_known_args()
+    if args.devices:
+        os.environ["XLA_FLAGS"] = (
+            f"--xla_force_host_platform_device_count={args.devices}")
+
+
+_early_args()
+
+import numpy as np  # noqa: E402
+import jax  # noqa: E402
+import jax.numpy as jnp  # noqa: E402
+
+from repro.configs import get_config, smoke_config  # noqa: E402
+from repro.models import build_model  # noqa: E402
+from repro.train import (AdamWConfig, Checkpointer, adamw_init,  # noqa: E402
+                         latest_step, load_pytree, make_train_step, Heartbeat)
+from repro.data import DataConfig, TokenPipeline  # noqa: E402
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=256)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_ckpt")
+    ap.add_argument("--ckpt-every", type=int, default=50)
+    ap.add_argument("--log-every", type=int, default=10)
+    ap.add_argument("--smoke", action="store_true",
+                    help="use the reduced same-family config (CPU-sized)")
+    ap.add_argument("--devices", type=int, default=0)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--compress-grads", default=None, choices=[None, "int8"])
+    args = ap.parse_args()
+
+    cfg = smoke_config(args.arch) if args.smoke else get_config(args.arch)
+    model = build_model(cfg, remat=True)
+    ocfg = AdamWConfig(lr=args.lr, warmup_steps=max(args.steps // 20, 5),
+                      total_steps=args.steps,
+                      compress_grads=args.compress_grads)
+    step_fn = jax.jit(make_train_step(model, ocfg), donate_argnums=(0, 1))
+
+    pipe = TokenPipeline(DataConfig(
+        vocab=cfg.vocab, global_batch=args.batch, seq_len=args.seq,
+        seed=args.seed, enc_seq=cfg.enc_seq if cfg.enc_dec else 0,
+        n_modality_tokens=cfg.n_modality_tokens, d_model=cfg.d_model))
+
+    key = jax.random.PRNGKey(args.seed)
+    params = model.init_fn(key)
+    opt = adamw_init(params)
+    start = 0
+    # resume if a committed checkpoint exists
+    if latest_step(args.ckpt_dir) is not None:
+        tmpl = {"params": params, "opt": opt}
+        restored, start = load_pytree(tmpl, args.ckpt_dir)
+        params, opt = restored["params"], restored["opt"]
+        start += 1
+        print(f"resumed from step {start - 1}")
+
+    ck = Checkpointer(args.ckpt_dir, keep=3)
+    hb = Heartbeat(os.path.join(args.ckpt_dir, "hb"), host_id=0)
+    n_params = sum(x.size for x in jax.tree.leaves(params))
+    print(f"arch={cfg.arch_id} params={n_params:,} steps={args.steps}")
+
+    for i in range(start, args.steps):
+        params, opt, metrics = step_fn(params, opt, pipe.get_batch(i))
+        hb.beat()
+        if i % args.log_every == 0 or i == args.steps - 1:
+            print(f"step {i:5d} loss {float(metrics['loss']):.4f} "
+                  f"gnorm {float(metrics['grad_norm']):.3f} "
+                  f"lr {float(metrics['lr']):.2e}", flush=True)
+        if i and i % args.ckpt_every == 0:
+            ck.save({"params": params, "opt": opt}, i)
+    ck.save({"params": params, "opt": opt}, args.steps - 1, blocking=True)
+    ck.close()
+    print("done")
+
+
+if __name__ == "__main__":
+    main()

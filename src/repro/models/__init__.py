@@ -1,0 +1,6 @@
+"""Composable LM substrate: dense GQA / MoE / SSM / RG-LRU / enc-dec / VLM."""
+from .model import Model, build_model, make_batch_specs
+from .sharding import param_specs, cache_specs, batch_axes
+
+__all__ = ["Model", "build_model", "make_batch_specs", "param_specs",
+           "cache_specs", "batch_axes"]

@@ -1,0 +1,211 @@
+"""Attention: GQA with RoPE, flash-style chunked causal/full/local variants,
+and single-token decode against a KV cache.
+
+GQA is implemented by **expanding K/V to the full head count** before the
+score einsums (``jnp.repeat`` along the head axis).  Under GSPMD this is the
+clean tensor-parallel form: Q/K/V all end up sharded on the same `model`
+head axis, every einsum contracts unsharded dims, and no resharding copies
+appear (the grouped-query form `[B,S,Kv,G,Dh]` forces the partitioner into
+"involuntary full rematerialization" when H is model-sharded).  When the KV
+head count doesn't divide the axis, K/V projections stay replicated and the
+repeat slices locally.
+
+Memory discipline is what makes the 32k-prefill and 500k-decode cells
+lowerable: scores are never materialized beyond a (q_chunk × kv_chunk) tile:
+
+  * ``flash_causal``  — two-level ``lax.scan`` (query chunks × kv chunks)
+    with online-softmax carry (m, l, acc);
+  * ``local_causal``  — query-chunk scan; each chunk attends to a
+    ``dynamic_slice`` window of the KV (compute ∝ S·window, not S²);
+  * ``full_bidir``    — encoder attention (whisper);
+  * ``decode_attend`` — one token vs. the cache: a [B,H,1,S] score row.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from .layers import dense, dense_init, rope
+
+__all__ = ["attn_init", "attn_project_qkv", "attn_output", "expand_kv",
+           "flash_causal", "local_causal", "full_bidir", "decode_attend",
+           "mha", "pick_chunk"]
+
+_NEG = -1e30
+
+
+def attn_init(key, d_model, n_heads, n_kv_heads, head_dim, dtype="bfloat16"):
+    kq, kk, kv, ko = jax.random.split(key, 4)
+    return {
+        "wq": dense_init(kq, (d_model,), (n_heads, head_dim), dtype),
+        "wk": dense_init(kk, (d_model,), (n_kv_heads, head_dim), dtype),
+        "wv": dense_init(kv, (d_model,), (n_kv_heads, head_dim), dtype),
+        "wo": dense_init(ko, (n_heads, head_dim), (d_model,), dtype),
+    }
+
+
+def attn_project_qkv(params, x, positions, rope_theta: Optional[float]):
+    q = dense(params["wq"], x, "bsd,dhq->bshq")
+    k = dense(params["wk"], x, "bsd,dhq->bshq")
+    v = dense(params["wv"], x, "bsd,dhq->bshq")
+    if rope_theta is not None:
+        q = rope(q, positions, rope_theta)
+        k = rope(k, positions, rope_theta)
+    return q, k, v
+
+
+def attn_output(params, o):
+    return dense(params["wo"], o, "bshq,hqd->bsd")
+
+
+def expand_kv(kv, n_heads: int):
+    """[B,S,Kv,Dh] → [B,S,H,Dh] by repeating each KV head H/Kv times."""
+    n_kv = kv.shape[2]
+    if n_kv == n_heads:
+        return kv
+    return jnp.repeat(kv, n_heads // n_kv, axis=2)
+
+
+def pick_chunk(s: int, pref: int) -> int:
+    """Largest divisor of s that is ≤ pref (shape-safe chunking)."""
+    c = min(pref, s)
+    while s % c != 0:
+        c -= 1
+    return c
+
+
+def flash_causal(q, k, v, q_chunk: int = 512, kv_chunk: int = 1024):
+    """Causal flash attention via two-level scan.  q,k,v: [B,S,H,Dh]
+    (k/v already expanded to H heads)."""
+    b, s, h, dh = q.shape
+    scale = dh ** -0.5
+    nq = s // q_chunk
+    nk = s // kv_chunk
+    qs = (q * scale).reshape(b, nq, q_chunk, h, dh)
+
+    def q_step(_, qi):
+        qc, iq = qi                                     # qc [b,qch,h,dh]
+
+        def kv_step(carry, ik):
+            m, l, acc = carry
+            ks = jax.lax.dynamic_slice_in_dim(k, ik * kv_chunk, kv_chunk, 1)
+            vs = jax.lax.dynamic_slice_in_dim(v, ik * kv_chunk, kv_chunk, 1)
+            sc = jnp.einsum("bqhd,bshd->bhqs", qc, ks,
+                            preferred_element_type=jnp.float32)
+            qpos = iq * q_chunk + jnp.arange(q_chunk)
+            kpos = ik * kv_chunk + jnp.arange(kv_chunk)
+            mask = qpos[:, None] >= kpos[None, :]
+            sc = jnp.where(mask[None, None], sc, _NEG)
+            m_new = jnp.maximum(m, sc.max(axis=-1))
+            p = jnp.exp(sc - m_new[..., None])
+            corr = jnp.exp(m - m_new)
+            l_new = l * corr + p.sum(axis=-1)
+            acc_new = acc * corr[..., None] + jnp.einsum(
+                "bhqs,bshd->bhqd", p.astype(vs.dtype), vs
+            ).astype(jnp.float32)
+            return (m_new, l_new, acc_new), None
+
+        m0 = jnp.full((b, h, q_chunk), _NEG, jnp.float32)
+        l0 = jnp.zeros((b, h, q_chunk), jnp.float32)
+        a0 = jnp.zeros((b, h, q_chunk, dh), jnp.float32)
+        # scanning all nk chunks keeps shapes static; chunks fully in the
+        # causal-masked future contribute exp(−inf)=0.  The step body is
+        # checkpointed: backward recomputes the score tile instead of
+        # saving [B,H,qch,kch] residuals per (q,kv) pair — the flash
+        # backward-recompute discipline, expressed with jax.checkpoint.
+        (m, l, acc), _ = jax.lax.scan(jax.checkpoint(kv_step), (m0, l0, a0),
+                                      jnp.arange(nk))
+        out = acc / jnp.maximum(l, 1e-30)[..., None]    # [b,h,qch,dh]
+        # cast inside the scan so the stacked ys are bf16, not f32
+        return None, out.transpose(0, 2, 1, 3).astype(q.dtype)
+
+    _, chunks = jax.lax.scan(
+        jax.checkpoint(q_step), None,
+        (qs.transpose(1, 0, 2, 3, 4), jnp.arange(nq)))
+    out = chunks.transpose(1, 0, 2, 3, 4).reshape(b, s, h, dh)
+    return out.astype(q.dtype)
+
+
+def local_causal(q, k, v, window: int, q_chunk: int = 512):
+    """Sliding-window causal attention: each query chunk attends to a
+    dynamic-sliced KV window of width (window + q_chunk)."""
+    b, s, h, dh = q.shape
+    scale = dh ** -0.5
+    if s <= window + q_chunk or s % q_chunk != 0:
+        return flash_causal(q, k, v, pick_chunk(s, q_chunk),
+                            pick_chunk(s, max(window, q_chunk)))
+    span = window + q_chunk                             # static window span
+    qs = (q * scale).reshape(b, s // q_chunk, q_chunk, h, dh)
+
+    def q_step(_, qi):
+        qc, iq = qi
+        start = jnp.maximum(iq * q_chunk + q_chunk - span, 0)
+        ks = jax.lax.dynamic_slice_in_dim(k, start, span, 1)
+        vs = jax.lax.dynamic_slice_in_dim(v, start, span, 1)
+        sc = jnp.einsum("bqhd,bshd->bhqs", qc, ks,
+                        preferred_element_type=jnp.float32)
+        qpos = iq * q_chunk + jnp.arange(q_chunk)
+        kpos = start + jnp.arange(span)
+        mask = (qpos[:, None] >= kpos[None, :]) & \
+               (qpos[:, None] - kpos[None, :] < window)
+        sc = jnp.where(mask[None, None], sc, _NEG)
+        p = jax.nn.softmax(sc, axis=-1)
+        out = jnp.einsum("bhqs,bshd->bqhd", p.astype(vs.dtype), vs)
+        return None, out.astype(q.dtype)
+
+    _, chunks = jax.lax.scan(
+        jax.checkpoint(q_step), None,
+        (qs.transpose(1, 0, 2, 3, 4), jnp.arange(s // q_chunk)))
+    out = chunks.transpose(1, 0, 2, 3, 4).reshape(b, s, h, dh)
+    return out.astype(q.dtype)
+
+
+def full_bidir(q, k, v, kv_chunk: int = 1024):
+    """Bidirectional attention (whisper encoder / decoder cross-attn)."""
+    b, s, h, dh = q.shape
+    scale = dh ** -0.5
+    sc = jnp.einsum("bqhd,bshd->bhqs", q * scale, k,
+                    preferred_element_type=jnp.float32)
+    p = jax.nn.softmax(sc, axis=-1)
+    out = jnp.einsum("bhqs,bshd->bqhd", p.astype(v.dtype), v)
+    return out.astype(q.dtype)
+
+
+def decode_attend(q, k_cache, v_cache, length, window: Optional[int] = None):
+    """One-token attention against the cache.
+
+    q: [B,1,H,Dh]; k/v_cache: [B,S,H,Dh] (expanded); length = cache fill.
+    """
+    b, _, h, dh = q.shape
+    s = k_cache.shape[1]
+    scale = dh ** -0.5
+    sc = jnp.einsum("bqhd,bshd->bhqs", q * scale, k_cache,
+                    preferred_element_type=jnp.float32)
+    pos = jnp.arange(s)
+    ok = pos < length
+    if window is not None:
+        ok = ok & (pos >= length - window)
+    sc = jnp.where(ok[None, None, None, :], sc, _NEG)
+    p = jax.nn.softmax(sc, axis=-1)
+    out = jnp.einsum("bhqs,bshd->bqhd", p.astype(v_cache.dtype), v_cache)
+    return out.astype(q.dtype)
+
+
+def mha(params, x, positions, kind: str, cfg, enc_out=None):
+    """Full attention sub-layer (projections + core + output)."""
+    q, k, v = attn_project_qkv(params, x, positions, cfg.rope_theta)
+    k = expand_kv(k, cfg.n_heads)
+    v = expand_kv(v, cfg.n_heads)
+    s = x.shape[1]
+    if kind == "attn_local":
+        o = local_causal(q, k, v, cfg.window, pick_chunk(s, cfg.q_chunk))
+    elif kind in ("attn", "attn_global"):
+        o = flash_causal(q, k, v, pick_chunk(s, cfg.q_chunk),
+                         pick_chunk(s, cfg.kv_chunk))
+    elif kind == "attn_bidir":
+        o = full_bidir(q, k, v, cfg.kv_chunk)
+    else:
+        raise ValueError(kind)
+    return attn_output(params, o)

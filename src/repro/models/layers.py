@@ -1,0 +1,79 @@
+"""Elementary layers: RMSNorm, dense projections, RoPE, SwiGLU.
+
+Plain functions over param dicts (no framework dependency): ``*_init`` builds
+params, ``*_apply`` consumes them.  All matmuls run in the config's compute
+dtype with f32 accumulation where it matters (norms, softmax, loss).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["dense_init", "dense", "rmsnorm_init", "rmsnorm",
+           "rope", "swiglu_init", "swiglu", "embed_init"]
+
+
+def _dtype(name: str):
+    return jnp.dtype(name)
+
+
+def dense_init(key, in_shape, out_shape, dtype="bfloat16", scale=None):
+    """General dense: weight [*in_shape, *out_shape], fan-in init."""
+    fan_in = 1
+    for s in in_shape:
+        fan_in *= s
+    scale = scale if scale is not None else fan_in ** -0.5
+    w = jax.random.normal(key, (*in_shape, *out_shape), jnp.float32) * scale
+    return {"w": w.astype(_dtype(dtype))}
+
+
+def dense(params, x, spec: str):
+    """einsum-specified projection, e.g. spec='bsd,dhq->bshq'."""
+    return jnp.einsum(spec, x, params["w"])
+
+
+def rmsnorm_init(dim, dtype="float32"):
+    return {"scale": jnp.zeros((dim,), _dtype(dtype))}
+
+
+def rmsnorm(params, x, eps=1e-6):
+    dt = x.dtype
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(xf), axis=-1, keepdims=True)
+    y = xf * jax.lax.rsqrt(var + eps)
+    return (y * (1.0 + params["scale"].astype(jnp.float32))).astype(dt)
+
+
+def rope(x, positions, theta: float = 10_000.0):
+    """Rotary embedding over the last dim of x[..., S, H, Dh]."""
+    dh = x.shape[-1]
+    half = dh // 2
+    freqs = jnp.exp(-jnp.arange(0, half, dtype=jnp.float32)
+                    * (jnp.log(theta) / half))
+    ang = positions.astype(jnp.float32)[..., None] * freqs  # [..., S, half]
+    sin = jnp.sin(ang)[..., None, :]
+    cos = jnp.cos(ang)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+def swiglu_init(key, d_model, d_ff, dtype="bfloat16"):
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {
+        "wi": dense_init(k1, (d_model,), (d_ff,), dtype),
+        "wg": dense_init(k2, (d_model,), (d_ff,), dtype),
+        "wo": dense_init(k3, (d_ff,), (d_model,), dtype),
+    }
+
+
+def swiglu(params, x):
+    h = dense(params["wi"], x, "bsd,df->bsf")
+    g = dense(params["wg"], x, "bsd,df->bsf")
+    h = jax.nn.silu(g.astype(jnp.float32)).astype(h.dtype) * h
+    return dense(params["wo"], h, "bsf,fd->bsd")
+
+
+def embed_init(key, vocab, d_model, dtype="bfloat16"):
+    w = jax.random.normal(key, (vocab, d_model), jnp.float32)
+    return {"w": (w * (d_model ** -0.5)).astype(_dtype(dtype))}

@@ -1,0 +1,422 @@
+"""Decoder-only LM assembly: embed → pattern-scanned blocks → tied-head loss.
+
+Layer stacking: the per-layer mixer pattern (e.g. gemma3's 5 local : 1
+global) is grouped into *periods*; parameters are stacked over periods and
+the stack is driven by one ``jax.lax.scan`` (compact HLO, O(1) compile cost
+in depth, remat-friendly).  Remainder layers (L mod period) are applied
+unrolled after the scan.
+
+Loss never materializes [B, S, V] logits: the head runs in sequence chunks
+(scan), each chunk's cross-entropy reduced immediately — the standard
+large-vocab discipline (gemma3's V = 262k at S = 4k would otherwise need
+34 GB per device).
+
+Prefill emits the KV caches as scan outputs; decode scans over
+(stacked params, stacked cache) updating the cache functionally.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import ModelConfig
+from .layers import embed_init, rmsnorm, rmsnorm_init, swiglu, swiglu_init
+from .attention import (attn_init, attn_project_qkv, attn_output, mha,
+                        decode_attend, expand_kv, full_bidir)
+from .moe import moe_init, moe_apply
+from .ssm import (mamba2_init, mamba2_apply, mamba2_decode_step,
+                  mamba2_state_shape)
+from .rglru import (rglru_init, rglru_apply, rglru_decode_step,
+                    rglru_state_shapes)
+
+__all__ = ["lm_init", "lm_loss", "lm_prefill", "lm_decode_step",
+           "init_cache", "pattern_layout"]
+
+
+# --------------------------------------------------------------------------
+# blocks
+# --------------------------------------------------------------------------
+
+def _mixer_init(key, cfg: ModelConfig, kind: str):
+    if kind.startswith("attn"):
+        return attn_init(key, cfg.d_model, cfg.n_heads, cfg.n_kv_heads,
+                         cfg.head_dim_, cfg.param_dtype)
+    if kind == "mamba2":
+        return mamba2_init(key, cfg, cfg.param_dtype)
+    if kind == "rglru":
+        return rglru_init(key, cfg, cfg.param_dtype)
+    raise ValueError(f"unknown mixer kind {kind!r}")
+
+
+def block_init(key, cfg: ModelConfig, kind: str, with_cross: bool = False):
+    km, kf, kc = jax.random.split(key, 3)
+    p: Dict[str, Any] = {
+        "norm1": rmsnorm_init(cfg.d_model),
+        "mixer": _mixer_init(km, cfg, kind),
+    }
+    if with_cross:
+        p["norm_x"] = rmsnorm_init(cfg.d_model)
+        p["cross"] = attn_init(kc, cfg.d_model, cfg.n_heads, cfg.n_kv_heads,
+                               cfg.head_dim_, cfg.param_dtype)
+    if cfg.ff_kind == "swiglu":
+        p["norm2"] = rmsnorm_init(cfg.d_model)
+        p["ff"] = swiglu_init(kf, cfg.d_model, cfg.d_ff, cfg.param_dtype)
+    elif cfg.ff_kind == "moe":
+        p["norm2"] = rmsnorm_init(cfg.d_model)
+        p["ff"] = moe_init(kf, cfg.d_model, cfg.d_expert, cfg.n_experts,
+                           cfg.param_dtype)
+    return p
+
+
+def block_apply(params, x, positions, kind: str, cfg: ModelConfig,
+                enc_out=None):
+    """Full-sequence block (train / prefill).  Returns (x, aux_loss)."""
+    aux = jnp.float32(0.0)
+    h = rmsnorm(params["norm1"], x)
+    if kind.startswith("attn"):
+        h = mha(params["mixer"], h, positions, kind, cfg)
+    elif kind == "mamba2":
+        h = mamba2_apply(params["mixer"], h, cfg)
+    elif kind == "rglru":
+        h = rglru_apply(params["mixer"], h, cfg)
+    x = x + h
+    if "cross" in params and enc_out is not None:
+        hc = rmsnorm(params["norm_x"], x)
+        q, _, _ = attn_project_qkv(params["cross"], hc, positions, None)
+        ke = jnp.einsum("bsd,dhq->bshq", enc_out, params["cross"]["wk"]["w"])
+        ve = jnp.einsum("bsd,dhq->bshq", enc_out, params["cross"]["wv"]["w"])
+        o = full_bidir(q, expand_kv(ke, cfg.n_heads),
+                       expand_kv(ve, cfg.n_heads), cfg.kv_chunk)
+        x = x + attn_output(params["cross"], o)
+    if "ff" in params:
+        h = rmsnorm(params["norm2"], x)
+        if cfg.ff_kind == "moe":
+            h, a = moe_apply(params["ff"], h, cfg.top_k, cfg.capacity_factor,
+                             cfg.moe_per_row)
+            aux = aux + a
+        else:
+            h = swiglu(params["ff"], h)
+        x = x + h
+    return x, aux
+
+
+# --------------------------------------------------------------------------
+# caches
+# --------------------------------------------------------------------------
+
+def _cache_shape_for(cfg: ModelConfig, kind: str, batch: int, max_seq: int):
+    dt = jnp.dtype(cfg.compute_dtype)
+    if kind.startswith("attn"):
+        s = min(max_seq, cfg.window + 256) if kind == "attn_local" else max_seq
+        kv = (batch, s, cfg.n_kv_heads, cfg.head_dim_)
+        return {"k": jnp.zeros(kv, dt), "v": jnp.zeros(kv, dt)}
+    if kind == "mamba2":
+        return {"ssm": jnp.zeros(mamba2_state_shape(cfg, batch), jnp.float32)}
+    if kind == "rglru":
+        shp = rglru_state_shapes(cfg, batch)
+        return {"h": jnp.zeros(shp["h"], jnp.float32),
+                "conv": jnp.zeros(shp["conv"], jnp.dtype(cfg.compute_dtype))}
+    raise ValueError(kind)
+
+
+def block_decode(params, x, cache, pos, kind: str, cfg: ModelConfig,
+                 enc_out=None):
+    """One-token block step.  x: [B,1,D]; returns (x, new cache)."""
+    h = rmsnorm(params["norm1"], x)
+    new_cache = dict(cache)
+    positions = jnp.full((x.shape[0], 1), pos, jnp.int32)
+    if kind.startswith("attn"):
+        q, k, v = attn_project_qkv(params["mixer"], h, positions,
+                                   cfg.rope_theta)
+        s_cache = cache["k"].shape[1]
+        # local layers keep a ring buffer of size ~window: write at pos mod
+        # size; RoPE'd keys make attention order-independent so the ring
+        # needs no rotation — mask by logical fill length only.
+        write = pos % s_cache if kind == "attn_local" else pos
+        k_new = jax.lax.dynamic_update_slice(
+            cache["k"], k.astype(cache["k"].dtype), (0, write, 0, 0))
+        v_new = jax.lax.dynamic_update_slice(
+            cache["v"], v.astype(cache["v"].dtype), (0, write, 0, 0))
+        length = jnp.minimum(pos + 1, s_cache)
+        o = decode_attend(q, expand_kv(k_new, cfg.n_heads),
+                          expand_kv(v_new, cfg.n_heads), length, None)
+        h = attn_output(params["mixer"], o)
+        new_cache["k"], new_cache["v"] = k_new, v_new
+    elif kind == "mamba2":
+        h, st = mamba2_decode_step(params["mixer"], h, cache["ssm"], cfg)
+        new_cache["ssm"] = st
+    elif kind == "rglru":
+        h, st = rglru_decode_step(params["mixer"], h,
+                                  {"h": cache["h"], "conv": cache["conv"]}, cfg)
+        new_cache["h"], new_cache["conv"] = st["h"], st["conv"]
+    x = x + h
+    if "cross" in params and enc_out is not None:
+        hc = rmsnorm(params["norm_x"], x)
+        q, _, _ = attn_project_qkv(params["cross"], hc, positions, None)
+        ke = jnp.einsum("bsd,dhq->bshq", enc_out, params["cross"]["wk"]["w"])
+        ve = jnp.einsum("bsd,dhq->bshq", enc_out, params["cross"]["wv"]["w"])
+        o = full_bidir(q, expand_kv(ke, cfg.n_heads),
+                       expand_kv(ve, cfg.n_heads), cfg.kv_chunk)
+        x = x + attn_output(params["cross"], o)
+    if "ff" in params:
+        h = rmsnorm(params["norm2"], x)
+        if cfg.ff_kind == "moe":
+            h, _ = moe_apply(params["ff"], h, cfg.top_k, cfg.capacity_factor,
+                             cfg.moe_per_row)
+        else:
+            h = swiglu(params["ff"], h)
+        x = x + h
+    return x, new_cache
+
+
+# --------------------------------------------------------------------------
+# layer layout: scan over periods + unrolled remainder
+# --------------------------------------------------------------------------
+
+def pattern_layout(cfg: ModelConfig) -> Tuple[int, int]:
+    period = len(cfg.layer_pattern)
+    return cfg.n_layers // period, cfg.n_layers % period
+
+
+def lm_init(key, cfg: ModelConfig, with_cross: bool = False):
+    n_full, rem = pattern_layout(cfg)
+    period = len(cfg.layer_pattern)
+    params: Dict[str, Any] = {
+        "embed": embed_init(jax.random.fold_in(key, 0), cfg.vocab,
+                            cfg.d_model, cfg.param_dtype),
+        "final_norm": rmsnorm_init(cfg.d_model),
+    }
+    scan_params = []
+    for slot, kind in enumerate(cfg.layer_pattern):
+        layers = [block_init(jax.random.fold_in(key, 1 + p * period + slot),
+                             cfg, kind, with_cross)
+                  for p in range(n_full)]
+        scan_params.append(jax.tree.map(lambda *xs: jnp.stack(xs), *layers))
+    params["scan"] = tuple(scan_params)
+    params["rem"] = tuple(
+        block_init(jax.random.fold_in(key, 10_000 + i), cfg,
+                   cfg.layer_pattern[i], with_cross)
+        for i in range(rem))
+    return params
+
+
+def _largest_divisor_leq(n: int, k: int) -> int:
+    d = min(k, n)
+    while n % d != 0:
+        d -= 1
+    return d
+
+
+def _backbone(params, x, positions, cfg: ModelConfig, enc_out=None,
+              remat: bool = True, remat_group: int = 4):
+    """Embeddings already applied; run all blocks.  Returns (x, aux).
+
+    Remat is *grouped*: the period scan is reshaped to
+    [n_groups, group, ...] and only the outer (group) scan is checkpointed.
+    Saved residuals drop from n_layers·B·S·D to n_groups·B·S·D at the cost
+    of one extra forward per group — the knob that fits train_4k activations
+    in HBM at 256-way batch sharding (see EXPERIMENTS.md §Perf).
+    """
+    pattern = cfg.layer_pattern
+
+    def period_body(carry, slot_params):
+        x, aux = carry
+        for i, kind in enumerate(pattern):
+            x, a = block_apply(slot_params[i], x, positions, kind, cfg,
+                               enc_out)
+            aux = aux + a
+        return (x, aux), None
+
+    scan_params = params["scan"]
+    n_full = jax.tree.leaves(scan_params)[0].shape[0] if \
+        jax.tree.leaves(scan_params) else 0
+    if n_full > 0:
+        if remat:
+            group = _largest_divisor_leq(n_full, remat_group)
+            grouped = jax.tree.map(
+                lambda a: a.reshape(n_full // group, group, *a.shape[1:]),
+                scan_params)
+
+            # nested remat: outer (group) checkpoint bounds saved residuals
+            # to n_groups·B·S·D; inner (per-period) checkpoint bounds the
+            # recompute-backward working set to ONE period's AD residuals.
+            def group_body(carry, group_params):
+                return jax.lax.scan(jax.checkpoint(period_body), carry,
+                                    group_params)
+
+            (x, aux), _ = jax.lax.scan(jax.checkpoint(group_body),
+                                       (x, jnp.float32(0.0)), grouped)
+        else:
+            (x, aux), _ = jax.lax.scan(period_body, (x, jnp.float32(0.0)),
+                                       scan_params)
+    else:
+        aux = jnp.float32(0.0)
+    for i, p in enumerate(params["rem"]):
+        x, a = block_apply(p, x, positions, pattern[i], cfg, enc_out)
+        aux = aux + a
+    return rmsnorm(params["final_norm"], x), aux
+
+
+def _embed_tokens(params, tokens, cfg: ModelConfig):
+    x = params["embed"]["w"][tokens] * jnp.asarray(
+        cfg.d_model ** 0.5, jnp.dtype(cfg.compute_dtype))
+    return x.astype(jnp.dtype(cfg.compute_dtype))
+
+
+def lm_loss(params, batch: Dict[str, jnp.ndarray], cfg: ModelConfig,
+            loss_chunk: int = 512, remat: bool = True,
+            enc_out=None) -> jnp.ndarray:
+    """Mean next-token cross-entropy (labels = batch['labels'], −1 ignored)."""
+    tokens = batch["tokens"]
+    labels = batch["labels"]
+    b, s_text = tokens.shape
+    x = _embed_tokens(params, tokens, cfg)
+    if cfg.n_modality_tokens and "frontend_emb" in batch:
+        fe = batch["frontend_emb"].astype(x.dtype)
+        x = jnp.concatenate([fe, x], axis=1)
+        labels = jnp.concatenate(
+            [jnp.full((b, fe.shape[1]), -1, labels.dtype), labels], axis=1)
+    s = x.shape[1]
+    positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32), (b, s))
+    h, aux = _backbone(params, x, positions, cfg, enc_out, remat)
+
+    # chunked tied-head cross-entropy
+    from .attention import pick_chunk
+    emb = params["embed"]["w"]
+    csz = pick_chunk(s, loss_chunk)
+    nchunk = s // csz
+    h_c = h.reshape(b, nchunk, csz, cfg.d_model).transpose(1, 0, 2, 3)
+    l_c = labels.reshape(b, nchunk, csz).transpose(1, 0, 2)
+
+    def chunk_ce(carry, xs):
+        hc, lc = xs
+        logits = jnp.einsum("bsd,vd->bsv", hc, emb,
+                            preferred_element_type=jnp.float32)
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(
+            logits, jnp.maximum(lc, 0)[..., None], axis=-1)[..., 0]
+        ok = (lc >= 0).astype(jnp.float32)
+        ce = (lse - gold) * ok
+        return (carry[0] + ce.sum(), carry[1] + ok.sum()), None
+
+    # checkpointed: backward recomputes each [B,chunk,V] logits tile instead
+    # of keeping all of them live (the 16 GB/device trap at V=64k, S=4k).
+    (tot, cnt), _ = jax.lax.scan(jax.checkpoint(chunk_ce),
+                                 (jnp.float32(0.0), jnp.float32(0.0)),
+                                 (h_c, l_c))
+    return tot / jnp.maximum(cnt, 1.0) + 0.01 * aux
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_seq: int):
+    """Functional KV/state cache pytree mirroring the scan/rem layout."""
+    n_full, rem = pattern_layout(cfg)
+    scan_cache = []
+    for kind in cfg.layer_pattern:
+        one = _cache_shape_for(cfg, kind, batch, max_seq)
+        scan_cache.append(jax.tree.map(
+            lambda x: jnp.broadcast_to(x, (n_full, *x.shape)).copy() if n_full
+            else x[None][:0], one))
+    rem_cache = tuple(_cache_shape_for(cfg, cfg.layer_pattern[i], batch, max_seq)
+                      for i in range(rem))
+    return {"scan": tuple(scan_cache), "rem": rem_cache,
+            "pos": jnp.asarray(0, jnp.int32)}
+
+
+def lm_prefill(params, tokens, cfg: ModelConfig, max_seq: int,
+               remat: bool = True, enc_out=None):
+    """Full forward over the prompt; returns (cache, last-token logits)."""
+    b, s = tokens.shape
+    x = _embed_tokens(params, tokens, cfg)
+    positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32), (b, s))
+    pattern = cfg.layer_pattern
+    cache0 = init_cache(cfg, b, max_seq)
+
+    def prefill_block(p, x, kind, cache_tpl):
+        h = rmsnorm(p["norm1"], x)
+        new_cache = dict(cache_tpl)
+        if kind.startswith("attn"):
+            q, k, v = attn_project_qkv(p["mixer"], h, positions, cfg.rope_theta)
+            s_cache = cache_tpl["k"].shape[1]
+            kpad = k.astype(cache_tpl["k"].dtype)
+            vpad = v.astype(cache_tpl["v"].dtype)
+            if kind == "attn_local" and s > s_cache:
+                # ring cache: position p lives at slot p % s_cache; keep the
+                # trailing window, rolled so decode writes continue the ring
+                kpad = jnp.roll(kpad[:, -s_cache:], s % s_cache, axis=1)
+                vpad = jnp.roll(vpad[:, -s_cache:], s % s_cache, axis=1)
+            new_cache["k"] = jax.lax.dynamic_update_slice(
+                cache_tpl["k"], kpad, (0, 0, 0, 0))
+            new_cache["v"] = jax.lax.dynamic_update_slice(
+                cache_tpl["v"], vpad, (0, 0, 0, 0))
+            h = mha(p["mixer"], h, positions, kind, cfg)
+        elif kind == "mamba2":
+            h, st = mamba2_apply(p["mixer"], h, cfg, return_state=True)
+            new_cache["ssm"] = st
+        elif kind == "rglru":
+            h, st = rglru_apply(p["mixer"], h, cfg, return_state=True)
+            new_cache["h"] = st["h"]
+            new_cache["conv"] = st["conv"].astype(cache_tpl["conv"].dtype)
+        x = x + h
+        if "ff" in p:
+            hf = rmsnorm(p["norm2"], x)
+            if cfg.ff_kind == "moe":
+                hf, _ = moe_apply(p["ff"], hf, cfg.top_k, cfg.capacity_factor,
+                                  cfg.moe_per_row)
+            else:
+                hf = swiglu(p["ff"], hf)
+            x = x + hf
+        return x, new_cache
+
+    def period_body(x, xs):
+        slot_params, slot_cache = xs
+        new_caches = []
+        for i, kind in enumerate(pattern):
+            x, nc = prefill_block(slot_params[i], x, kind, slot_cache[i])
+            new_caches.append(nc)
+        return x, tuple(new_caches)
+
+    body = jax.checkpoint(period_body) if remat else period_body
+    x, scan_cache = jax.lax.scan(body, x, (params["scan"], cache0["scan"]))
+    rem_cache = []
+    for i, p in enumerate(params["rem"]):
+        x, nc = prefill_block(p, x, pattern[i], cache0["rem"][i])
+        rem_cache.append(nc)
+    h = rmsnorm(params["final_norm"], x)
+    logits = jnp.einsum("bd,vd->bv", h[:, -1], params["embed"]["w"],
+                        preferred_element_type=jnp.float32)
+    cache = {"scan": scan_cache, "rem": tuple(rem_cache),
+             "pos": jnp.asarray(s, jnp.int32)}
+    return cache, logits
+
+
+def lm_decode_step(params, token, cache, cfg: ModelConfig, enc_out=None):
+    """One decode step: token [B,1] int32 → (logits [B,V], new cache)."""
+    pos = cache["pos"]
+    b = token.shape[0]
+    x = _embed_tokens(params, token, cfg)
+    pattern = cfg.layer_pattern
+
+    def period_body(x, xs):
+        slot_params, slot_cache = xs
+        new_caches = []
+        for i, kind in enumerate(pattern):
+            x, nc = block_decode(slot_params[i], x, slot_cache[i], pos, kind,
+                                 cfg, enc_out)
+            new_caches.append(nc)
+        return x, tuple(new_caches)
+
+    x, scan_cache = jax.lax.scan(period_body, x,
+                                 (params["scan"], cache["scan"]))
+    rem_cache = []
+    for i, p in enumerate(params["rem"]):
+        x, nc = block_decode(p, x, cache["rem"][i], pos, pattern[i], cfg,
+                             enc_out)
+        rem_cache.append(nc)
+    h = rmsnorm(params["final_norm"], x)
+    logits = jnp.einsum("bd,vd->bv", h[:, 0], params["embed"]["w"],
+                        preferred_element_type=jnp.float32)
+    return logits, {"scan": scan_cache, "rem": tuple(rem_cache),
+                    "pos": pos + 1}

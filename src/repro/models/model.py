@@ -1,0 +1,138 @@
+"""Unified model API: config → {init, loss, prefill, decode, specs}.
+
+Every assigned architecture exposes the same four entry points so that
+train/serve/launch code is arch-agnostic:
+
+  * ``init_fn(key)``                      → params pytree
+  * ``loss_fn(params, batch)``            → scalar loss      (train_* cells)
+  * ``prefill_fn(params, batch)``         → (cache, logits)  (prefill_* cells)
+  * ``decode_fn(params, token, cache)``   → (logits, cache)  (decode_* cells)
+
+plus shape/spec helpers used by the dry-run launcher (everything below works
+on ``jax.eval_shape`` of these functions — no allocation at scale).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import ModelConfig, ShapeConfig
+from . import lm as _lm
+from . import encdec as _encdec
+from .sharding import param_specs, cache_specs, batch_axes
+
+__all__ = ["Model", "build_model", "make_batch_specs"]
+
+
+@dataclasses.dataclass(frozen=True)
+class Model:
+    cfg: ModelConfig
+    init_fn: Callable
+    loss_fn: Callable
+    prefill_fn: Callable
+    decode_fn: Callable
+
+    def abstract_params(self, key=None):
+        key = jax.random.PRNGKey(0) if key is None else key
+        return jax.eval_shape(self.init_fn, key)
+
+    def abstract_cache(self, batch: int, max_seq: int):
+        if self.cfg.enc_dec:
+            def mk():
+                c = _lm.init_cache(self.cfg, batch, max_seq)
+                c["enc_out"] = jnp.zeros(
+                    (batch, self.cfg.enc_seq, self.cfg.d_model),
+                    jnp.dtype(self.cfg.compute_dtype))
+                return c
+            return jax.eval_shape(mk)
+        return jax.eval_shape(lambda: _lm.init_cache(self.cfg, batch, max_seq))
+
+    def param_partition_specs(self, mesh=None):
+        return param_specs(self.abstract_params(), mesh)
+
+    def cache_partition_specs(self, batch: int, max_seq: int, mesh):
+        bspec = batch_axes(batch, mesh)
+        return cache_specs(self.abstract_cache(batch, max_seq), bspec, mesh)
+
+
+def build_model(cfg: ModelConfig, remat: bool = True) -> Model:
+    if cfg.enc_dec:
+        def init_fn(key):
+            return _encdec.encdec_init(key, cfg)
+
+        def loss_fn(params, batch):
+            return _encdec.encdec_loss(params, batch, cfg, remat=remat)
+
+        def prefill_fn(params, batch, max_seq=None):
+            max_seq = max_seq or batch["tokens"].shape[1] + 64
+            cache, logits, enc_out = _encdec.encdec_prefill(
+                params, batch["frames"], batch["tokens"], cfg,
+                max_seq=max_seq, remat=remat)
+            cache["enc_out"] = enc_out
+            return cache, logits
+
+        def decode_fn(params, token, cache):
+            enc_out = cache["enc_out"]
+            core = {k: v for k, v in cache.items() if k != "enc_out"}
+            logits, new_core = _encdec.encdec_decode_step(
+                params, token, core, enc_out, cfg)
+            new_core["enc_out"] = enc_out
+            return logits, new_core
+    else:
+        def init_fn(key):
+            return _lm.lm_init(key, cfg)
+
+        def loss_fn(params, batch):
+            return _lm.lm_loss(params, batch, cfg, remat=remat)
+
+        def prefill_fn(params, batch, max_seq=None):
+            # headroom for decode writes beyond the prompt
+            max_seq = max_seq or batch["tokens"].shape[1] + 64
+            return _lm.lm_prefill(params, batch["tokens"], cfg,
+                                  max_seq=max_seq, remat=remat)
+
+        def decode_fn(params, token, cache):
+            return _lm.lm_decode_step(params, token, cache, cfg)
+
+    return Model(cfg=cfg, init_fn=init_fn, loss_fn=loss_fn,
+                 prefill_fn=prefill_fn, decode_fn=decode_fn)
+
+
+def make_batch_specs(cfg: ModelConfig, shape: ShapeConfig,
+                     dtype=jnp.int32) -> Dict[str, jax.ShapeDtypeStruct]:
+    """ShapeDtypeStruct stand-ins for every model input of a shape cell
+    (the dry-run's input_specs)."""
+    b, s = shape.global_batch, shape.seq_len
+    cdt = jnp.dtype(cfg.compute_dtype)
+    if shape.kind == "train":
+        out = {
+            "tokens": jax.ShapeDtypeStruct((b, s), jnp.int32),
+            "labels": jax.ShapeDtypeStruct((b, s), jnp.int32),
+        }
+        if cfg.enc_dec:
+            out["frames"] = jax.ShapeDtypeStruct((b, cfg.enc_seq, cfg.d_model),
+                                                 cdt)
+        if cfg.n_modality_tokens:
+            # frontend stub supplies patch/frame embeddings; text tokens
+            # shrink so total sequence stays at the assigned seq_len
+            m = cfg.n_modality_tokens
+            out["tokens"] = jax.ShapeDtypeStruct((b, s - m), jnp.int32)
+            out["labels"] = jax.ShapeDtypeStruct((b, s - m), jnp.int32)
+            out["frontend_emb"] = jax.ShapeDtypeStruct((b, m, cfg.d_model), cdt)
+        return out
+    if shape.kind == "prefill":
+        out = {"tokens": jax.ShapeDtypeStruct((b, s), jnp.int32)}
+        if cfg.enc_dec:
+            out["frames"] = jax.ShapeDtypeStruct((b, cfg.enc_seq, cfg.d_model),
+                                                 cdt)
+        if cfg.n_modality_tokens:
+            m = cfg.n_modality_tokens
+            out["tokens"] = jax.ShapeDtypeStruct((b, s - m), jnp.int32)
+            out["frontend_emb"] = jax.ShapeDtypeStruct((b, m, cfg.d_model), cdt)
+        return out
+    if shape.kind == "decode":
+        return {"token": jax.ShapeDtypeStruct((b, 1), jnp.int32)}
+    raise ValueError(shape.kind)

@@ -1,0 +1,110 @@
+"""Mixture-of-Experts FF with sort-based dispatch (expert parallelism).
+
+Dense one-hot dispatch (Mesh-TF style) is O(T·E·C) and collapses at
+E=384 (kimi-k2).  We use the sort-based route (MaxText/Megablocks style):
+
+  1. top-k routing: (token, expert, gate) triples, T·k of them;
+  2. sort triples by expert id; per-expert segment offsets via searchsorted;
+  3. gather tokens into [E, C, D] expert batches (capacity C with
+     overflow-drop — the standard capacity-factor contract);
+  4. batched expert SwiGLU [E,C,D]·[E,D,F] einsums — experts shard over the
+     `model` axis (EP), so under GSPMD the gather/scatter become all-to-alls;
+  5. scatter-add back with gate weights.
+
+The routing sort + segment machinery is the same sort/prefix-sum vocabulary
+as the paper's frontier packing (frontier.py) — one framework, one idiom.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .layers import dense_init
+
+__all__ = ["moe_init", "moe_apply"]
+
+
+def moe_init(key, d_model, d_expert, n_experts, dtype="bfloat16"):
+    kr, ki, kg, ko = jax.random.split(key, 4)
+    scale_in = d_model ** -0.5
+    scale_out = d_expert ** -0.5
+    def w(k, shape, s):
+        return (jax.random.normal(k, shape, jnp.float32) * s).astype(dtype)
+    return {
+        "router": dense_init(kr, (d_model,), (n_experts,), "float32"),
+        "wi_e": {"w": w(ki, (n_experts, d_model, d_expert), scale_in)},
+        "wg_e": {"w": w(kg, (n_experts, d_model, d_expert), scale_in)},
+        "wo_e": {"w": w(ko, (n_experts, d_expert, d_model), scale_out)},
+    }
+
+
+def moe_apply(params, x, top_k: int, capacity_factor: float = 1.25,
+              per_row: bool = False):
+    """x: [B, S, D] -> [B, S, D] plus aux load-balance loss.
+
+    ``per_row=True`` dispatches each batch row independently (vmap over B):
+    the routing sort/argsort/searchsorted stay *local to the batch shard*
+    under GSPMD instead of operating on the globally-concatenated token
+    axis — removing the all-gather of router state that otherwise dominates
+    collective time at large T (see EXPERIMENTS.md §Perf, llama4 prefill).
+    """
+    if per_row:
+        def one_row(xr):
+            out, aux = moe_apply(params, xr[None], top_k, capacity_factor,
+                                 per_row=False)
+            return out[0], aux
+        outs, auxs = jax.vmap(one_row)(x)
+        return outs, jnp.mean(auxs)
+    b, s, d = x.shape
+    t = b * s
+    xt = x.reshape(t, d)
+    e = params["wi_e"]["w"].shape[0]
+
+    logits = jnp.einsum("td,de->te", xt.astype(jnp.float32),
+                        params["router"]["w"].astype(jnp.float32))
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_vals, expert_ids = jax.lax.top_k(probs, top_k)   # [t, k]
+    gate_vals = gate_vals / jnp.maximum(
+        gate_vals.sum(-1, keepdims=True), 1e-9)
+
+    # ---- sort-based dispatch ----
+    flat_expert = expert_ids.reshape(-1)                  # [t*k]
+    flat_token = jnp.repeat(jnp.arange(t, dtype=jnp.int32), top_k)
+    flat_gate = gate_vals.reshape(-1)
+    order = jnp.argsort(flat_expert)
+    se, st, sg = flat_expert[order], flat_token[order], flat_gate[order]
+
+    cap = int(capacity_factor * t * top_k / e) + 1
+    start = jnp.searchsorted(se, jnp.arange(e, dtype=jnp.int32), side="left")
+    rank = jnp.arange(t * top_k, dtype=jnp.int32) - start[se]
+    keep = rank < cap                                     # capacity drop
+
+    # gather into [e, cap] token index table (sentinel t = dropped slot)
+    slot = se * cap + rank
+    token_tbl = jnp.full((e * cap,), t, jnp.int32).at[
+        jnp.where(keep, slot, e * cap)].set(st, mode="drop")
+    gate_tbl = jnp.zeros((e * cap,), jnp.float32).at[
+        jnp.where(keep, slot, e * cap)].set(sg, mode="drop")
+    token_tbl = token_tbl.reshape(e, cap)
+    gate_tbl = gate_tbl.reshape(e, cap)
+
+    xt_pad = jnp.concatenate([xt, jnp.zeros((1, d), xt.dtype)], 0)
+    xe = xt_pad[token_tbl]                                # [e, cap, d]
+
+    # batched expert SwiGLU
+    h = jnp.einsum("ecd,edf->ecf", xe, params["wi_e"]["w"])
+    g = jnp.einsum("ecd,edf->ecf", xe, params["wg_e"]["w"])
+    h = jax.nn.silu(g.astype(jnp.float32)).astype(h.dtype) * h
+    ye = jnp.einsum("ecf,efd->ecd", h, params["wo_e"]["w"])
+    ye = ye * gate_tbl[..., None].astype(ye.dtype)
+
+    # scatter back
+    yt = jnp.zeros((t + 1, d), jnp.float32).at[token_tbl.reshape(-1)].add(
+        ye.reshape(e * cap, d).astype(jnp.float32))
+    out = yt[:t].reshape(b, s, d).astype(x.dtype)
+
+    # load-balance aux loss (Switch-style)
+    me = probs.mean(0)
+    ce = jnp.zeros((e,), jnp.float32).at[flat_expert].add(1.0) / (t * top_k)
+    aux = e * jnp.sum(me * ce)
+    return out, aux

@@ -1,0 +1,102 @@
+"""Pipeline parallelism (GPipe-style) over a mesh axis via shard_map.
+
+The layer stack is split into `n_stages` contiguous groups; stage s (device
+coordinate along the ``pipe`` axis) holds only its group's parameters
+(leading layer axis sharded over ``pipe``).  Microbatches stream through:
+at tick t, stage s processes microbatch (t − s) and hands its activation to
+stage s+1 with a ``collective_permute`` — the bubble is the standard
+(S − 1)/(M + S − 1) fraction.
+
+This composes with the existing axes: run it over the ``pod`` axis of the
+production mesh for inter-pod pipelining (activations cross the slow
+inter-pod links once per microbatch instead of gradients once per step —
+the standard reason to pipeline across pods), keeping `data`×`model`
+parallelism inside each pod.
+
+`pp_forward` is forward-only (serving / dry-run); training composes it with
+jax.grad under the same shard_map (grads of collective_permute are the
+reverse permute — handled by JAX automatically).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+__all__ = ["pp_forward", "build_pp_forward"]
+
+
+def _stage_fn(local_params, x_mb, n_stages: int, axis: str,
+              block_fn: Callable):
+    """Runs inside shard_map.  local_params: this stage's layer slab
+    (leading dim = layers_per_stage); x_mb: [M, mb, ...] microbatches
+    (replicated input; only stage 0 reads it).  Returns [M, mb, ...] outputs
+    (valid on the last stage; other stages return zeros)."""
+    stage = jax.lax.axis_index(axis)
+    m = x_mb.shape[0]
+    ticks = m + n_stages - 1
+    perm = [(i, i + 1) for i in range(n_stages - 1)]
+
+    def apply_stage(x):
+        def body(h, layer_params):
+            return block_fn(layer_params, h), None
+        h, _ = jax.lax.scan(body, x, local_params)
+        return h
+
+    def tick(carry, t):
+        recv_buf, outputs = carry
+        # stage 0 ingests microbatch t; others use what arrived last tick
+        mb_idx = jnp.clip(t, 0, m - 1)
+        x_in = jnp.where(stage == 0,
+                         jax.lax.dynamic_index_in_dim(x_mb, mb_idx, 0,
+                                                      keepdims=False),
+                         recv_buf)
+        y = apply_stage(x_in)
+        # pass forward: stage s → s+1 (last stage's send is dropped)
+        sent = jax.lax.ppermute(y, axis, perm)
+        # last stage emits microbatch (t − (S−1)) at tick t
+        out_idx = jnp.clip(t - (n_stages - 1), 0, m - 1)
+        emit = (stage == n_stages - 1) & (t >= n_stages - 1)
+        outputs = jax.lax.cond(
+            emit,
+            lambda o: jax.lax.dynamic_update_index_in_dim(
+                o, y, out_idx, 0),
+            lambda o: o,
+            outputs)
+        return (sent, outputs), None
+
+    outputs0 = jnp.zeros_like(x_mb)
+    recv0 = jnp.zeros_like(x_mb[0])
+    (_, outputs), _ = jax.lax.scan(tick, (recv0, outputs0),
+                                   jnp.arange(ticks))
+    # broadcast the last stage's result to all stages so the caller sees a
+    # replicated output (one extra permute-ring; cheap relative to compute)
+    outputs = jax.lax.psum(
+        jnp.where(stage == n_stages - 1, outputs, 0.0), axis)
+    return outputs
+
+
+def build_pp_forward(mesh, axis: str, n_stages: int, block_fn: Callable):
+    """Returns pp(params_stacked, x_microbatches) -> outputs.
+
+    params_stacked: [n_layers, ...] pytree, n_layers % n_stages == 0 —
+    sharded over `axis` on the leading dim.  x_microbatches: [M, mb, ...]
+    replicated.  Output: [M, mb, ...] replicated.
+    """
+    fn = functools.partial(_stage_fn, n_stages=n_stages, axis=axis,
+                           block_fn=block_fn)
+    return jax.shard_map(
+        fn, mesh=mesh,
+        in_specs=(P(axis), P()),
+        out_specs=P(),
+        check_vma=False)
+
+
+def pp_forward(mesh, axis: str, params_stacked, x_microbatches,
+               block_fn: Callable):
+    n_stages = mesh.shape[axis]
+    return build_pp_forward(mesh, axis, n_stages, block_fn)(
+        params_stacked, x_microbatches)

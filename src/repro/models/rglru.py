@@ -1,0 +1,109 @@
+"""RG-LRU recurrent block (RecurrentGemma / Griffin, arXiv:2402.19427).
+
+Real-Gated Linear Recurrent Unit:
+    r_t = σ(W_a x_t + b_a)            (recurrence gate)
+    i_t = σ(W_x x_t + b_x)            (input gate)
+    a_t = a^(c·r_t)   with a = σ(Λ),  c = 8
+    h_t = a_t ⊙ h_{t−1} + √(1 − a_t²) ⊙ (i_t ⊙ x_t)
+
+The linear recurrence runs as a ``jax.lax.associative_scan`` over (a, b)
+pairs — O(log S) depth on TPU.  The full residual block is the Griffin
+recurrent block: in-proj → short conv1d → RG-LRU → gated out-proj.
+
+Decode carries (h state [B, W], conv tail [B, conv−1, W]) in the cache.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .layers import dense, dense_init
+
+__all__ = ["rglru_init", "rglru_apply", "rglru_decode_step", "rglru_state_shapes"]
+
+_C = 8.0
+
+
+def rglru_init(key, cfg, dtype="bfloat16"):
+    d = cfg.d_model
+    w = cfg.d_ff_rnn
+    ks = jax.random.split(key, 6)
+    u = jax.random.uniform(ks[4], (w,), jnp.float32, 0.9, 0.999)
+    return {
+        "in_x": dense_init(ks[0], (d,), (w,), dtype),
+        "in_gate": dense_init(ks[1], (d,), (w,), dtype),
+        "conv_w": (jax.random.normal(ks[5], (cfg.rglru_conv_width, w),
+                                     jnp.float32) * 0.1).astype(dtype),
+        "w_a": dense_init(ks[2], (w,), (w,), dtype),
+        "w_i": dense_init(ks[3], (w,), (w,), dtype),
+        "lam": jnp.log(u / (1.0 - u)),   # Λ with a = σ(Λ) ∈ (0.9, 0.999)
+        "out": dense_init(jax.random.fold_in(key, 7), (w,), (d,), dtype),
+    }
+
+
+def rglru_state_shapes(cfg, batch):
+    w = cfg.d_ff_rnn
+    return {"h": (batch, w), "conv": (batch, cfg.rglru_conv_width - 1, w)}
+
+
+def _conv1d(x, conv_w):
+    """Causal depthwise conv along S: x [B,S,W], conv_w [K,W]."""
+    k = conv_w.shape[0]
+    pads = jnp.pad(x, ((0, 0), (k - 1, 0), (0, 0)))
+    out = jnp.zeros_like(x)
+    for i in range(k):
+        out = out + pads[:, i: i + x.shape[1], :] * conv_w[i][None, None, :]
+    return out
+
+
+def _gates(params, xb):
+    r = jax.nn.sigmoid(dense(params["w_a"], xb, "bsw,wv->bsv").astype(jnp.float32))
+    i = jax.nn.sigmoid(dense(params["w_i"], xb, "bsw,wv->bsv").astype(jnp.float32))
+    log_a = -_C * r * jax.nn.softplus(params["lam"])     # log a_t ≤ 0
+    a = jnp.exp(log_a)
+    beta = jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2.0 * log_a), 1e-12))
+    return a, beta * (i * xb.astype(jnp.float32))
+
+
+def rglru_apply(params, u, cfg, return_state: bool = False):
+    """u: [B,S,D] -> [B,S,D] (full Griffin recurrent block).
+
+    With ``return_state`` also returns {h: [B,W], conv: [B,K−1,W]} — the
+    decode continuation state after the sequence."""
+    xb_raw = dense(params["in_x"], u, "bsd,dw->bsw")
+    gate = dense(params["in_gate"], u, "bsd,dw->bsw")
+    xb = _conv1d(xb_raw, params["conv_w"])
+    a, b = _gates(params, xb)                            # [B,S,W] f32
+
+    def combine(p, q):
+        a1, b1 = p
+        a2, b2 = q
+        return a1 * a2, b1 * a2 + b2
+
+    _, h = jax.lax.associative_scan(combine, (a, b), axis=1)
+    y = h * jax.nn.gelu(gate.astype(jnp.float32))
+    out = dense(params["out"], y.astype(u.dtype), "bsw,wd->bsd")
+    if return_state:
+        k = cfg.rglru_conv_width
+        conv_tail = xb_raw[:, -(k - 1):, :]
+        pad = (k - 1) - conv_tail.shape[1]
+        if pad > 0:
+            conv_tail = jnp.pad(conv_tail, ((0, 0), (pad, 0), (0, 0)))
+        return out, {"h": h[:, -1], "conv": conv_tail}
+    return out
+
+
+def rglru_decode_step(params, u, state, cfg):
+    """u: [B,1,D]; state: {h: [B,W], conv: [B,K−1,W]} → (y, new state)."""
+    xb = dense(params["in_x"], u, "bsd,dw->bsw")         # [B,1,W]
+    gate = dense(params["in_gate"], u, "bsd,dw->bsw")
+    k = cfg.rglru_conv_width
+    hist = jnp.concatenate([state["conv"], xb.astype(state["conv"].dtype)], 1)
+    conv_out = jnp.einsum("bkw,kw->bw", hist.astype(jnp.float32),
+                          params["conv_w"].astype(jnp.float32))
+    xb1 = conv_out[:, None, :].astype(u.dtype)
+    a, b = _gates(params, xb1)                           # [B,1,W]
+    h = a[:, 0] * state["h"] + b[:, 0]
+    y = h[:, None, :] * jax.nn.gelu(gate.astype(jnp.float32))
+    out = dense(params["out"], y.astype(u.dtype), "bsw,wd->bsd")
+    return out, {"h": h, "conv": hist[:, 1:, :]}

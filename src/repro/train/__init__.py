@@ -1,0 +1,14 @@
+from .optimizer import (AdamWConfig, OptState, adamw_init, adamw_update,
+                        warmup_cosine, clip_by_global_norm, zero_shard_specs,
+                        quantize_grads_int8)
+from .train_step import make_train_step, init_train_state, jit_train_step
+from .checkpoint import Checkpointer, save_pytree, load_pytree, latest_step
+from .elastic import reshard_state, Heartbeat
+
+__all__ = [
+    "AdamWConfig", "OptState", "adamw_init", "adamw_update", "warmup_cosine",
+    "clip_by_global_norm", "zero_shard_specs", "quantize_grads_int8",
+    "make_train_step", "init_train_state", "jit_train_step",
+    "Checkpointer", "save_pytree", "load_pytree", "latest_step",
+    "reshard_state", "Heartbeat",
+]

@@ -1,0 +1,63 @@
+"""Elastic scaling + failure handling.
+
+``reshard_state``: move a (params, opt_state) bundle onto a different mesh —
+the core of both planned resizes (512→384 chips) and unplanned mesh shrink
+after node loss.  Arrays are global in the checkpoint format, so resharding
+is a device_put with the new mesh's NamedShardings; for data-parallel-only
+dimension changes no value movement beyond slicing occurs.
+
+``Heartbeat``: coordinator-side liveness file protocol.  Every host touches
+its heartbeat file each step; the coordinator declares a host dead after
+``timeout`` and triggers: (1) restore from the last committed checkpoint,
+(2) re-form the mesh from survivors, (3) resume — the deterministic data
+pipeline (data/pipeline.py) makes the resumed stream exact.
+"""
+from __future__ import annotations
+
+import os
+import time
+from typing import Optional
+
+import jax
+from jax.sharding import NamedSharding
+
+__all__ = ["reshard_state", "Heartbeat"]
+
+
+def reshard_state(state, new_mesh, spec_tree):
+    """device_put a pytree onto a new mesh with the given PartitionSpecs."""
+    return jax.tree.map(
+        lambda x, s: jax.device_put(x, NamedSharding(new_mesh, s)),
+        state, spec_tree)
+
+
+class Heartbeat:
+    def __init__(self, directory: str, host_id: int, timeout: float = 60.0):
+        self.dir = directory
+        self.host_id = host_id
+        self.timeout = timeout
+        os.makedirs(directory, exist_ok=True)
+
+    def _path(self, host: int) -> str:
+        return os.path.join(self.dir, f"host_{host:05d}.hb")
+
+    def beat(self):
+        with open(self._path(self.host_id), "w") as f:
+            f.write(str(time.time()))
+
+    def alive_hosts(self, num_hosts: int) -> list:
+        now = time.time()
+        out = []
+        for h in range(num_hosts):
+            try:
+                with open(self._path(h)) as f:
+                    t = float(f.read().strip())
+                if now - t < self.timeout:
+                    out.append(h)
+            except (FileNotFoundError, ValueError):
+                pass
+        return out
+
+    def dead_hosts(self, num_hosts: int) -> list:
+        alive = set(self.alive_hosts(num_hosts))
+        return [h for h in range(num_hosts) if h not in alive]

@@ -1,0 +1,125 @@
+"""AdamW with global-norm clipping, warmup-cosine schedule, ZeRO-style
+optimizer-state sharding and optional int8 gradient compression.
+
+No optax in this environment — the optimizer is ~80 lines of pytree math,
+which also makes the sharding story explicit:
+
+  * baseline: optimizer moments share the parameter PartitionSpec;
+  * ``zero=True``: moments are additionally sharded over the ``data`` axis on
+    their largest divisible dimension (ZeRO-1) — the dry-run shows the
+    memory delta;
+  * ``compress_grads="int8"``: gradients are quantized per-tensor with error
+    feedback before the (compiler-inserted) all-reduce — a distributed-
+    optimization knob for straggler/bandwidth-limited pods.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+__all__ = ["AdamWConfig", "OptState", "adamw_init", "adamw_update",
+           "warmup_cosine", "clip_by_global_norm", "zero_shard_specs",
+           "quantize_grads_int8"]
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamWConfig:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    clip_norm: float = 1.0
+    warmup_steps: int = 100
+    total_steps: int = 10_000
+    zero: bool = False
+    compress_grads: Optional[str] = None   # None | "int8"
+
+
+class OptState(NamedTuple):
+    mu: Any
+    nu: Any
+    count: jnp.ndarray
+
+
+def adamw_init(params) -> OptState:
+    zeros = lambda p: jnp.zeros_like(p, dtype=jnp.float32)
+    return OptState(mu=jax.tree.map(zeros, params),
+                    nu=jax.tree.map(zeros, params),
+                    count=jnp.zeros((), jnp.int32))
+
+
+def warmup_cosine(cfg: AdamWConfig, step):
+    warm = jnp.minimum(step / jnp.maximum(cfg.warmup_steps, 1), 1.0)
+    prog = jnp.clip((step - cfg.warmup_steps)
+                    / jnp.maximum(cfg.total_steps - cfg.warmup_steps, 1), 0, 1)
+    return cfg.lr * warm * 0.5 * (1.0 + jnp.cos(jnp.pi * prog))
+
+
+def clip_by_global_norm(grads, max_norm: float):
+    gn = jnp.sqrt(sum(jnp.sum(jnp.square(g.astype(jnp.float32)))
+                      for g in jax.tree.leaves(grads)))
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(gn, 1e-9))
+    return jax.tree.map(lambda g: (g.astype(jnp.float32) * scale), grads), gn
+
+
+def quantize_grads_int8(grads):
+    """Per-tensor symmetric int8 quantization (error feedback is applied by
+    the caller across steps).  Returns (q, scales) — the all-reduce then
+    moves 4× fewer bytes; dequantize with q·scale."""
+    def q(g):
+        a = jnp.max(jnp.abs(g)) + 1e-12
+        scale = a / 127.0
+        return (jnp.clip(jnp.round(g / scale), -127, 127).astype(jnp.int8),
+                scale)
+    flat, tdef = jax.tree.flatten(grads)
+    qs = [q(g) for g in flat]
+    return (jax.tree.unflatten(tdef, [x[0] for x in qs]),
+            jax.tree.unflatten(tdef, [x[1] for x in qs]))
+
+
+def adamw_update(cfg: AdamWConfig, params, grads, state: OptState):
+    grads, gnorm = clip_by_global_norm(grads, cfg.clip_norm)
+    count = state.count + 1
+    lr = warmup_cosine(cfg, count)
+    b1c = 1.0 - cfg.b1 ** count.astype(jnp.float32)
+    b2c = 1.0 - cfg.b2 ** count.astype(jnp.float32)
+
+    new_mu = jax.tree.map(lambda g, m: cfg.b1 * m + (1 - cfg.b1) * g,
+                          grads, state.mu)
+    new_nu = jax.tree.map(lambda g, v: cfg.b2 * v + (1 - cfg.b2) * jnp.square(g),
+                          grads, state.nu)
+
+    def upd(p, m, v):
+        step = (m / b1c) / (jnp.sqrt(v / b2c) + cfg.eps) \
+            + cfg.weight_decay * p.astype(jnp.float32)
+        return (p.astype(jnp.float32) - lr * step).astype(p.dtype)
+
+    new_params = jax.tree.map(upd, params, new_mu, new_nu)
+    return new_params, OptState(new_mu, new_nu, count), \
+        {"grad_norm": gnorm, "lr": lr}
+
+
+def zero_shard_specs(param_spec_tree, params_shape, mesh, axis: str = "data"):
+    """ZeRO-1: shard each moment on its largest dim divisible by |axis|
+    that the param spec leaves unsharded."""
+    size = mesh.shape[axis]
+
+    def one(spec, shp):
+        if axis in tuple(spec):       # already sharded on this axis (FSDP)
+            return spec
+        dims = list(spec) + [None] * (len(shp.shape) - len(spec))
+        best, best_d = -1, -1
+        for d, (s, cur) in enumerate(zip(shp.shape, dims)):
+            if cur is None and s % size == 0 and s > best:
+                best, best_d = s, d
+        if best_d < 0:
+            return P(*dims)
+        dims[best_d] = axis
+        return P(*dims)
+
+    return jax.tree.map(one, param_spec_tree, params_shape)

@@ -1,0 +1,27 @@
+import numpy as np
+import pytest
+
+from repro.graphs import sbm, rand_local, grid3d
+
+
+@pytest.fixture(scope="session")
+def sbm_graph():
+    """8 planted clusters of 100 vertices (ground truth for recovery tests)."""
+    return sbm(k=8, size=100, p_in=0.15, p_out=0.002, seed=1)
+
+
+@pytest.fixture(scope="session")
+def local_graph():
+    return rand_local(2000, degree=5, seed=3)
+
+
+@pytest.fixture(scope="session")
+def grid_graph():
+    return grid3d(10)
+
+
+def dense_from_dict(d, n):
+    out = np.zeros(n, dtype=np.float64)
+    for k, v in d.items():
+        out[k] = v
+    return out

@@ -1,0 +1,180 @@
+"""Diffusion engines vs their sequential references (paper §4.2–4.5)."""
+import numpy as np
+import pytest
+import jax
+import jax.numpy as jnp
+
+from repro.core import (nibble, pr_nibble, pr_nibble_sparse, hk_pr,
+                        rand_hk_pr, evolving_sets, seq, sweep_cut_dense)
+from repro.core.sparsevec import sv_lookup
+from conftest import dense_from_dict
+
+
+# ---------------------------------------------------------------- Nibble ---
+
+def test_nibble_matches_sequential(sbm_graph):
+    res = nibble(sbm_graph, 5, eps=1e-7, T=15)
+    ref = seq.seq_nibble(sbm_graph, 5, 1e-7, 15)
+    p_ref = dense_from_dict(ref["p"], sbm_graph.n)
+    np.testing.assert_allclose(np.asarray(res.p), p_ref, atol=1e-6)
+    assert int(res.iterations) == ref["iterations"]
+
+
+def test_nibble_mass_bounded(sbm_graph):
+    """Truncation only removes mass: ‖p‖₁ ≤ 1 and > 0."""
+    res = nibble(sbm_graph, 3, eps=1e-6, T=10)
+    total = float(jnp.sum(res.p))
+    assert 0.0 < total <= 1.0 + 1e-5
+
+
+def test_nibble_work_bound(sbm_graph):
+    """Theorem 2: per-iteration work O(1/ε) — edge work bounded."""
+    eps = 1e-5
+    res = nibble(sbm_graph, 5, eps=eps, T=20)
+    per_iter = float(res.edge_work) / max(int(res.iterations), 1)
+    assert per_iter <= 4.0 / eps  # generous constant
+
+
+# ------------------------------------------------------------- PR-Nibble ---
+
+def test_pr_nibble_mass_conservation(sbm_graph):
+    res = pr_nibble(sbm_graph, 5, eps=1e-6, alpha=0.05)
+    total = float(jnp.sum(res.p) + jnp.sum(res.r))
+    assert total == pytest.approx(1.0, abs=1e-4)
+
+
+def test_pr_nibble_agrees_with_sequential(sbm_graph):
+    res = pr_nibble(sbm_graph, 5, eps=1e-6, alpha=0.05)
+    ref = seq.seq_pr_nibble(sbm_graph, 5, 1e-6, 0.05, optimized=True)
+    p_ref = dense_from_dict(ref["p"], sbm_graph.n)
+    p_par = np.asarray(res.p, np.float64)
+    corr = np.corrcoef(p_par, p_ref)[0, 1]
+    assert corr > 0.9999
+
+
+def test_pr_nibble_parallel_push_overhead(sbm_graph):
+    """Table 1: parallel pushes exceed sequential but within a small factor
+    (paper: ≤1.6× on its graphs; we allow 2.5× on tiny synthetic ones)."""
+    res = pr_nibble(sbm_graph, 5, eps=1e-6, alpha=0.05)
+    ref = seq.seq_pr_nibble(sbm_graph, 5, 1e-6, 0.05, optimized=True)
+    ratio = int(res.pushes) / max(ref["pushes"], 1)
+    assert 1.0 <= ratio < 2.5
+    # iterations ≪ pushes (abundant parallelism)
+    assert int(res.iterations) < int(res.pushes) / 10
+
+
+def test_pr_nibble_work_bound(sbm_graph):
+    """Theorem 3: total edge work ≤ O(1/(αε)) regardless of rounds."""
+    eps, alpha = 1e-5, 0.05
+    res = pr_nibble(sbm_graph, 5, eps=eps, alpha=alpha)
+    assert float(res.edge_work) <= 4.0 / (alpha * eps)
+
+
+def test_pr_nibble_rules_same_cluster(sbm_graph):
+    """Fig 2: optimized rule finds the same-conductance cluster."""
+    a = pr_nibble(sbm_graph, 5, eps=1e-6, alpha=0.05, optimized=True)
+    b = pr_nibble(sbm_graph, 5, eps=1e-6, alpha=0.05, optimized=False)
+    sa = sweep_cut_dense(sbm_graph, a.p, 1 << 10, 1 << 16)
+    sb = sweep_cut_dense(sbm_graph, b.p, 1 << 10, 1 << 16)
+    assert float(sa.best_conductance) == pytest.approx(
+        float(sb.best_conductance), rel=0.1)
+    # optimized does no more work
+    assert int(a.pushes) <= int(b.pushes)
+
+
+def test_pr_nibble_sparse_equals_dense(sbm_graph):
+    d = pr_nibble(sbm_graph, 5, eps=1e-6, alpha=0.05)
+    s = pr_nibble_sparse(sbm_graph, 5, eps=1e-6, alpha=0.05)
+    ids = np.asarray(s.p.ids)[: int(s.p.count)]
+    vals = np.asarray(s.p.vals)[: int(s.p.count)]
+    p_sparse = np.zeros(sbm_graph.n, np.float32)
+    p_sparse[ids] = vals
+    np.testing.assert_allclose(p_sparse, np.asarray(d.p), atol=1e-6)
+    assert int(s.pushes) == int(d.pushes)
+
+
+def test_pr_nibble_beta_variant(sbm_graph):
+    """β<1 (top-β by r/d per round, paper §4.3 variant) terminates, conserves
+    mass, and produces the same solution up to the ε tolerance.  (It often
+    *reduces* total pushes — prioritizing high-residual vertices mimics the
+    sequential order — the work/parallelism trade-off the paper describes.)"""
+    full = pr_nibble(sbm_graph, 5, eps=1e-6, alpha=0.05, beta=1.0)
+    part = pr_nibble(sbm_graph, 5, eps=1e-6, alpha=0.05, beta=0.5)
+    assert not bool(part.overflow)
+    mass = float(np.sum(np.asarray(part.p)) + np.sum(np.asarray(part.r)))
+    assert mass == pytest.approx(1.0, abs=1e-4)
+    assert int(part.pushes) <= int(full.pushes) * 1.2
+    corr = np.corrcoef(np.asarray(full.p), np.asarray(part.p))[0, 1]
+    assert corr > 0.999
+
+
+# ----------------------------------------------------------------- HK-PR ---
+
+def test_hk_pr_identical_to_sequential(sbm_graph):
+    """Claim C3: the parallel algorithm applies the same updates."""
+    res = hk_pr(sbm_graph, 5, N=10, eps=1e-5, t=5.0)
+    ref = seq.seq_hk_pr(sbm_graph, 5, 10, 1e-5, 5.0)
+    p_ref = dense_from_dict(ref["p"], sbm_graph.n)
+    p_par = np.asarray(res.p, np.float64)
+    np.testing.assert_allclose(p_par, p_ref, rtol=1e-3, atol=1e-5 * p_ref.max())
+
+
+def test_hk_pr_converges_to_taylor_oracle(sbm_graph):
+    """ε→0 limit equals the untruncated degree-N Taylor recurrence."""
+    res = hk_pr(sbm_graph, 5, N=8, eps=1e-9, t=3.0)
+    ref = seq.seq_hk_pr(sbm_graph, 5, 8, 0.0, 3.0, truncate=False)
+    p_ref = dense_from_dict(ref["p"], sbm_graph.n)
+    p_par = np.asarray(res.p, np.float64)
+    assert np.corrcoef(p_par, p_ref)[0, 1] > 0.9999
+
+
+# ------------------------------------------------------------ rand-HK-PR ---
+
+def test_rand_hk_histogram_is_exact(sbm_graph):
+    """The sort+prefix-sum histogram equals numpy bincount of destinations."""
+    res = rand_hk_pr(sbm_graph, 5, 4096, 10, 5.0, jax.random.PRNGKey(0))
+    dests = np.asarray(res.dests)
+    counts = np.bincount(dests, minlength=sbm_graph.n)
+    ids = np.asarray(res.ids)[: int(res.nnz)]
+    vals = np.asarray(res.vals)[: int(res.nnz)]
+    np.testing.assert_allclose(vals * 4096, counts[ids])
+    assert float(res.vals.sum()) == pytest.approx(1.0, abs=1e-6)
+
+
+def test_rand_hk_concentrates_in_block(sbm_graph):
+    res = rand_hk_pr(sbm_graph, 5, 8192, 8, 3.0, jax.random.PRNGKey(1))
+    ids = np.asarray(res.ids)[: int(res.nnz)]
+    vals = np.asarray(res.vals)[: int(res.nnz)]
+    mass_in_block = vals[ids < 100].sum()
+    assert mass_in_block > 0.6
+    # and it matches the sequential walker's distribution closely
+    ref = seq.seq_rand_hk_pr(sbm_graph, 5, 4096, 8, 3.0, seed=2)
+    p_ref = dense_from_dict(ref["p"], sbm_graph.n)
+    mass_ref = p_ref[:100].sum()
+    assert abs(mass_in_block - mass_ref) < 0.1
+
+
+# ---------------------------------------------------------- Evolving sets ---
+
+def test_evolving_sets_recovers_planted(sbm_graph):
+    res = evolving_sets(sbm_graph, 5, 40, 10**7, 0.15,
+                        key=jax.random.PRNGKey(0))
+    members = np.asarray(res.ids)[: int(res.count)]
+    assert np.mean(members < 100) > 0.8
+    assert float(res.conductance) < 0.2
+
+
+def test_pr_nibble_seed_set(sbm_graph):
+    """Paper footnote 3: multi-vertex seed sets — bigger frontiers, same
+    contract; a seed set inside one block still recovers that block."""
+    from repro.core.sweep import sweep_cut_dense
+    seeds = jnp.asarray([5, 17, 42, 63], jnp.int32)
+    res = pr_nibble(sbm_graph, (seeds, 4), eps=1e-6, alpha=0.05)
+    mass = float(jnp.sum(res.p) + jnp.sum(res.r))
+    assert mass == pytest.approx(1.0, abs=1e-4)
+    sw = sweep_cut_dense(sbm_graph, res.p, 1 << 11, 1 << 17)
+    members = np.asarray(sw.cluster())[: int(sw.best_size)]
+    assert np.mean(members < 100) > 0.85
+    # multi-seed first round pushes ≥ 1 vertex per seed
+    single = pr_nibble(sbm_graph, 5, eps=1e-6, alpha=0.05)
+    assert int(res.iterations) <= int(single.iterations) + 5

@@ -1,0 +1,53 @@
+"""Distributed engine tests — run in a subprocess with 8 host devices so the
+main test process keeps its single-device jax config."""
+import json
+import os
+import subprocess
+import sys
+
+import pytest
+
+_SCRIPT = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import json
+import numpy as np
+import jax, jax.numpy as jnp
+from repro.graphs import sbm, partition_rows
+from repro.core import pr_nibble
+from repro.core.distributed import dist_pr_nibble
+
+mesh = jax.make_mesh((8,), ("data",),
+                     axis_types=(jax.sharding.AxisType.Auto,))
+g = sbm(k=8, size=100, p_in=0.15, p_out=0.002, seed=1)
+pg = partition_rows(g, 8)
+res = dist_pr_nibble(pg, mesh, 5, eps=1e-6, alpha=0.05,
+                     cap_f=256, cap_e=4096, cap_x=1024)
+ref = pr_nibble(g, 5, eps=1e-6, alpha=0.05)
+p_dist = np.asarray(res.p)[: g.n]
+r_dist = np.asarray(res.r)[: g.n]
+out = {
+    "iters": [int(res.iterations), int(ref.iterations)],
+    "pushes": [int(res.pushes), int(ref.pushes)],
+    "p_maxdiff": float(np.abs(p_dist - np.asarray(ref.p)).max()),
+    "mass": float(p_dist.sum() + r_dist.sum()),
+    "overflow": bool(res.overflow),
+}
+print("RESULT:" + json.dumps(out))
+"""
+
+
+@pytest.mark.slow
+def test_dist_pr_nibble_matches_single_device():
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(os.path.dirname(__file__), "..", "src")
+    proc = subprocess.run([sys.executable, "-c", _SCRIPT], env=env,
+                          capture_output=True, text=True, timeout=600)
+    assert proc.returncode == 0, proc.stderr[-3000:]
+    line = [l for l in proc.stdout.splitlines() if l.startswith("RESULT:")][0]
+    out = json.loads(line[len("RESULT:"):])
+    assert out["iters"][0] == out["iters"][1]
+    assert out["pushes"][0] == out["pushes"][1]
+    assert out["p_maxdiff"] < 1e-6
+    assert abs(out["mass"] - 1.0) < 1e-4
+    assert not out["overflow"]

@@ -1,0 +1,60 @@
+"""HLO cost walker: matches XLA cost_analysis on scan-free programs and
+multiplies scan bodies by trip count (which cost_analysis does not)."""
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.launch.hlocost import analyze_hlo
+from repro.launch.roofline import HW, collective_bytes
+
+
+def test_walker_matches_xla_on_scan_free():
+    def g(a, b):
+        h = jnp.einsum("ij,jk->ik", a, b)
+        return jax.nn.relu(h) @ b.T
+
+    a = jax.ShapeDtypeStruct((256, 512), jnp.float32)
+    b = jax.ShapeDtypeStruct((512, 1024), jnp.float32)
+    c = jax.jit(g).lower(a, b).compile()
+    ca = c.cost_analysis()
+    walk = analyze_hlo(c.as_text())
+    assert walk.flops == ca["flops"]
+    assert walk.bytes == ca["bytes accessed"]
+
+
+def test_walker_multiplies_scan_trip_count():
+    def f(w, x):
+        def body(c, _):
+            return jnp.tanh(c @ w), None
+        y, _ = jax.lax.scan(body, x, None, length=10)
+        return y
+
+    w = jax.ShapeDtypeStruct((512, 512), jnp.float32)
+    c = jax.jit(f).lower(w, w).compile()
+    walk = analyze_hlo(c.as_text())
+    one_matmul = 2 * 512 ** 3
+    assert 10 * one_matmul <= walk.flops <= 10.2 * one_matmul
+    # XLA itself reports ~1 matmul
+    assert c.cost_analysis()["flops"] < 2 * one_matmul
+
+
+def test_walker_sliced_scan_bytes_not_inflated():
+    """Reading one row per scan step must cost ~rows, not trips×matrix."""
+    def f(big):
+        def body(c, i):
+            return c + jax.lax.dynamic_slice_in_dim(big, i, 1, 0)[0], None
+        out, _ = jax.lax.scan(body, jnp.zeros((1024,)), jnp.arange(64))
+        return out
+
+    big = jax.ShapeDtypeStruct((64, 1024), jnp.float32)
+    c = jax.jit(f).lower(big).compile()
+    walk = analyze_hlo(c.as_text())
+    matrix_bytes = 64 * 1024 * 4
+    assert walk.bytes < 12 * matrix_bytes  # not 64× the matrix
+
+
+def test_hw_terms():
+    hw = HW()
+    assert hw.peak_flops == 197e12
+    assert hw.hbm_bw == 819e9
+    assert hw.link_bw == 50e9

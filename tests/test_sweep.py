@@ -1,0 +1,67 @@
+"""Sweep cut (paper §4.1, Theorem 1): parallel == sequential, exactly."""
+import numpy as np
+import pytest
+import jax.numpy as jnp
+from hypothesis import given, settings, strategies as st
+
+from repro.core import pr_nibble, sweep_cut, sweep_cut_dense, seq
+from repro.graphs import sbm, rand_local
+
+
+def _run_both(graph, p_dense):
+    n = graph.n
+    sw = sweep_cut_dense(graph, jnp.asarray(p_dense, jnp.float32),
+                         cap_n=1 << 11, cap_e=1 << 16)
+    assert not bool(sw.overflow)
+    p_dict = {i: float(p_dense[i]) for i in np.flatnonzero(p_dense > 0)}
+    ref = seq.seq_sweep_cut(graph, p_dict)
+    return sw, ref
+
+
+def test_sweep_matches_sequential_on_diffusion(sbm_graph):
+    res = pr_nibble(sbm_graph, 5, eps=1e-6, alpha=0.05)
+    sw, ref = _run_both(sbm_graph, np.asarray(res.p))
+    assert int(sw.best_size) == ref["best_size"]
+    assert float(sw.best_conductance) == pytest.approx(
+        ref["best_conductance"], rel=1e-5)
+    # identical member set
+    assert sorted(np.asarray(sw.cluster())[: int(sw.best_size)].tolist()) == \
+        sorted(ref["cluster"])
+
+
+def test_sweep_finds_planted_cluster(sbm_graph):
+    res = pr_nibble(sbm_graph, 5, eps=1e-7, alpha=0.01)
+    sw = sweep_cut_dense(sbm_graph, res.p, 1 << 11, 1 << 17)
+    # seed 5 lives in block 0 = vertices [0, 100)
+    members = np.asarray(sw.cluster())[: int(sw.best_size)]
+    frac_in_block = np.mean(members < 100)
+    assert frac_in_block > 0.9
+    assert float(sw.best_conductance) < 0.2
+
+
+def test_sweep_conductance_definition(sbm_graph):
+    """φ(S_j) from the prefix arrays equals direct recomputation."""
+    res = pr_nibble(sbm_graph, 7, eps=1e-6, alpha=0.05)
+    sw = sweep_cut_dense(sbm_graph, res.p, 1 << 11, 1 << 16)
+    order = np.asarray(sw.order)
+    for j in [1, 3, 10, int(sw.best_size)]:
+        if j > int(sw.nnz):
+            continue
+        cond = seq.conductance_of_set(sbm_graph, order[:j])
+        assert float(sw.conductance[j - 1]) == pytest.approx(cond, rel=1e-5)
+
+
+@settings(max_examples=15, deadline=None)
+@given(st.integers(min_value=0, max_value=2**31 - 1))
+def test_sweep_random_vectors_match_sequential(seed):
+    """Property: for arbitrary sparse vectors on a fixed graph, the parallel
+    sweep returns the sequential sweep's conductance."""
+    rng = np.random.default_rng(seed)
+    graph = rand_local(500, degree=4, seed=11)
+    nnz = rng.integers(2, 60)
+    ids = rng.choice(500, size=nnz, replace=False)
+    p = np.zeros(500, dtype=np.float32)
+    p[ids] = rng.random(nnz).astype(np.float32) + 1e-3
+    sw, ref = _run_both(graph, p)
+    assert float(sw.best_conductance) == pytest.approx(
+        ref["best_conductance"], rel=1e-4)
