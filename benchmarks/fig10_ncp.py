@@ -1,8 +1,9 @@
 """Figure 10 reproduction: network community profile (NCP) plots.
 
 The paper generates NCPs by running PR-Nibble from many random seeds over an
-(α, ε) grid; here the seed loop is vmapped (one XLA program per batch — the
-parallel embodiment of "many local computations in parallel").  Writes
+(α, ε) grid; the seed loop goes through the batched multi-seed engine
+(core/batched.py): one fused diffusion+sweep XLA program per batch, with
+per-seed overflow retry so no seed is dropped from the profile.  Writes
 experiments/ncp_<graph>.csv; claim C6 is the dip at the planted/community
 scale.
 """
@@ -16,10 +17,17 @@ from .common import get_graph, emit, timeit
 OUT = os.path.join(os.path.dirname(__file__), "..", "experiments")
 
 
-def run(graph_name: str = "sbm-planted", num_seeds: int = 32):
+def run(graph_name: str = "sbm-planted", num_seeds: int = 32,
+        smoke: bool = False):
     g = get_graph(graph_name)
-    us, res = timeit(ncp, g, num_seeds, (0.01, 0.05), (1e-6, 1e-7),
-                     16, repeats=1)
+    if smoke:
+        # smallest config: few seeds, one cold run, right-sized workspaces
+        us, res = timeit(ncp, g, 8, (0.01, 0.05), (1e-6, 1e-7), 8,
+                         cap_f=1 << 10, cap_e=1 << 14, cap_n=1 << 10,
+                         sweep_cap_e=1 << 14, repeats=1, prime=False)
+    else:
+        us, res = timeit(ncp, g, num_seeds, (0.01, 0.05), (1e-6, 1e-7),
+                         16, repeats=1)
     os.makedirs(OUT, exist_ok=True)
     path = os.path.join(OUT, f"ncp_{graph_name}.csv")
     with open(path, "w") as f:

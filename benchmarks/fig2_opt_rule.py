@@ -11,8 +11,11 @@ from repro.core import pr_nibble, sweep_cut_dense
 from .common import GRAPH_SUITE, get_graph, emit, timeit
 
 
-def run(alpha=0.01, eps=1e-7):
-    for name in GRAPH_SUITE:
+def run(alpha=0.01, eps=1e-7, smoke: bool = False):
+    graphs = ["sbm-planted"] if smoke else list(GRAPH_SUITE)
+    if smoke:
+        eps = 1e-6
+    for name in graphs:
         g = get_graph(name)
         seed = 5 if name == "sbm-planted" else int(np.argmax(np.asarray(g.deg)))
         us_o, orig = timeit(pr_nibble, g, seed, eps, alpha, False, repeats=1)

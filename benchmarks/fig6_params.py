@@ -18,29 +18,37 @@ def _cond(g, p):
     return float(sweep_cut_dense(g, p, 1 << 12, 1 << 18).best_conductance)
 
 
-def run(graph_name: str = "sbm-planted"):
+def run(graph_name: str = "sbm-planted", smoke: bool = False):
     g = get_graph(graph_name)
     seed = 5 if graph_name == "sbm-planted" else int(np.argmax(np.asarray(g.deg)))
 
-    for T in (5, 10, 20):
-        for eps in (1e-6, 1e-7, 1e-8):
+    T_grid = (10,) if smoke else (5, 10, 20)
+    nibble_eps = (1e-7,) if smoke else (1e-6, 1e-7, 1e-8)
+    prn_eps = (1e-6,) if smoke else (1e-5, 1e-6, 1e-7)
+    N_grid = (10,) if smoke else (5, 10, 20)
+    hk_eps = (1e-5,) if smoke else (1e-5, 1e-7)
+    NW_grid = (1024,) if smoke else (1024, 4096)
+    K_grid = (10,) if smoke else (5, 10, 20)
+
+    for T in T_grid:
+        for eps in nibble_eps:
             us, res = timeit(nibble, g, seed, eps, T, repeats=1)
             emit(f"fig6/nibble/T={T},eps={eps:g}", us,
                  f"cond={_cond(g, res.p):.4f};work={int(res.edge_work)}")
 
-    for eps in (1e-5, 1e-6, 1e-7):
+    for eps in prn_eps:
         us, res = timeit(pr_nibble, g, seed, eps, 0.01, repeats=1)
         emit(f"fig6/pr_nibble/eps={eps:g}", us,
              f"cond={_cond(g, res.p):.4f};pushes={int(res.pushes)}")
 
-    for N in (5, 10, 20):
-        for eps in (1e-5, 1e-7):
+    for N in N_grid:
+        for eps in hk_eps:
             us, res = timeit(hk_pr, g, seed, N, eps, 10.0, repeats=1)
             emit(f"fig6/hk_pr/N={N},eps={eps:g}", us,
                  f"cond={_cond(g, res.p):.4f};work={int(res.edge_work)}")
 
-    for NW in (1024, 4096):
-        for K in (5, 10, 20):
+    for NW in NW_grid:
+        for K in K_grid:
             us, res = timeit(rand_hk_pr, g, seed, NW, K, 10.0,
                              jax.random.PRNGKey(0), repeats=1)
             sw = sweep_cut(g, res.ids, res.vals, res.nnz, 1 << 18)

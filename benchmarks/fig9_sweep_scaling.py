@@ -4,18 +4,27 @@ Paper claim (C4): parallel sweep time scales ~linearly with the input
 volume (the super-linear sort is a small fraction).  We grow the cluster by
 loosening Nibble's ε (exactly the paper's methodology) and report µs vs
 vol(S_N), plus the fitted scaling exponent.
+
+The collected diffusion vectors are then swept again through the *batched*
+sweep (core/batched.py): all curves in one vmapped XLA call, reporting the
+per-seed amortized cost — the dispatch-amortization story the batched
+engine is built on.
 """
 import numpy as np
+import jax.numpy as jnp
 
-from repro.core import nibble, sweep_cut_dense
+from repro.core import nibble, sweep_cut_dense, batched_sweep_cut
 from .common import get_graph, emit, timeit
 
 
-def run(graph_name: str = "randLocal-50k"):
-    g = get_graph(graph_name)
+def run(graph_name: str = "randLocal-50k", smoke: bool = False):
+    g = get_graph("sbm-planted" if smoke else graph_name)
+    if smoke:
+        graph_name = "sbm-planted"
     seed = int(np.argmax(np.asarray(g.deg)))
-    vols, times = [], []
-    for eps in (1e-5, 1e-6, 1e-7, 1e-8, 1e-9):
+    eps_grid = (1e-6, 1e-8) if smoke else (1e-5, 1e-6, 1e-7, 1e-8, 1e-9)
+    vols, times, ps = [], [], []
+    for eps in eps_grid:
         res = nibble(g, seed, eps, 20)
         p = np.asarray(res.p)
         nnz = int((p > 0).sum())
@@ -27,10 +36,18 @@ def run(graph_name: str = "randLocal-50k"):
              f"nnz={nnz};vol={vol};cond={float(sw.best_conductance):.4f}")
         vols.append(vol)
         times.append(us)
+        ps.append(p)
     if len(vols) >= 3:
         # scaling exponent from log-log fit (≈1 = linear)
         k = np.polyfit(np.log(vols), np.log(times), 1)[0]
         emit(f"fig9/{graph_name}/scaling_exponent", 0.0, f"k={k:.2f}")
+    if ps:
+        # batched path: every curve's sweep in one vmapped dispatch
+        batch = jnp.asarray(np.stack(ps))
+        us_b, swb = timeit(batched_sweep_cut, g, batch, 1 << 13, 1 << 19)
+        emit(f"fig9/{graph_name}/batched_sweep", us_b,
+             f"B={len(ps)};per_seed_us={us_b / len(ps):.1f};"
+             f"min_cond={float(np.min(np.asarray(swb.best_conductance))):.4f}")
 
 
 if __name__ == "__main__":

@@ -12,9 +12,10 @@ from repro.kernels import ops
 from .common import get_graph, emit, timeit
 
 
-def run():
+def run(smoke: bool = False):
     g = get_graph("randLocal-50k")
     rng = np.random.default_rng(0)
+    scan_n = 1 << 14 if smoke else 1 << 18
 
     # saturated diffusion step: hybrid ELL+COO vs pure XLA scatter
     nbr, wgt, es, ed, ew, n_pad, W = ops.pack_banded_ell(g, halo=2)
@@ -35,11 +36,11 @@ def run():
     emit("kernels/xla_scatter_baseline", us, f"edges={2 * g.m}")
 
     # prefix scan
-    x = jnp.asarray(rng.random(1 << 18), jnp.float32)
+    x = jnp.asarray(rng.random(scan_n), jnp.float32)
     us, _ = timeit(ops.prefix_sum, x)
-    emit("kernels/prefix_sum_pallas_pipeline", us, "n=262144")
+    emit("kernels/prefix_sum_pallas_pipeline", us, f"n={scan_n}")
     us, _ = timeit(jnp.cumsum, x)
-    emit("kernels/cumsum_xla_baseline", us, "n=262144")
+    emit("kernels/cumsum_xla_baseline", us, f"n={scan_n}")
 
 
 if __name__ == "__main__":

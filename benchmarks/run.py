@@ -1,7 +1,8 @@
 """Benchmark harness — one module per paper table/figure.
 
 Prints ``name,us_per_call,derived`` CSV.  --fast trims graph sizes (default);
---full runs the complete suite.
+--full runs the complete suite; --smoke runs each benchmark's smallest
+config (the CI gate — must finish in a couple of minutes on one CPU core).
 """
 import argparse
 import sys
@@ -10,19 +11,24 @@ import sys
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--full", action="store_true")
+    ap.add_argument("--smoke", action="store_true",
+                    help="smallest config per benchmark; used by CI")
     ap.add_argument("--only", default=None,
-                    help="comma list: table1,table3,fig2,fig6,fig9,fig10,kernels")
+                    help="comma list: table1,table3,fig2,fig6,fig9,fig10,"
+                         "kernels,batched")
     args = ap.parse_args()
     from . import (table1_pushes, table3_runtimes, fig2_opt_rule, fig6_params,
-                   fig9_sweep_scaling, fig10_ncp, kernels_bench)
+                   fig9_sweep_scaling, fig10_ncp, kernels_bench, batched_bench)
+    smoke = args.smoke
     suites = {
-        "table1": lambda: table1_pushes.run(),
-        "table3": lambda: table3_runtimes.run(fast=not args.full),
-        "fig2": lambda: fig2_opt_rule.run(),
-        "fig6": lambda: fig6_params.run(),
-        "fig9": lambda: fig9_sweep_scaling.run(),
-        "fig10": lambda: fig10_ncp.run(),
-        "kernels": lambda: kernels_bench.run(),
+        "table1": lambda: table1_pushes.run(smoke=smoke),
+        "table3": lambda: table3_runtimes.run(fast=not args.full, smoke=smoke),
+        "fig2": lambda: fig2_opt_rule.run(smoke=smoke),
+        "fig6": lambda: fig6_params.run(smoke=smoke),
+        "fig9": lambda: fig9_sweep_scaling.run(smoke=smoke),
+        "fig10": lambda: fig10_ncp.run(smoke=smoke),
+        "kernels": lambda: kernels_bench.run(smoke=smoke),
+        "batched": lambda: batched_bench.run(smoke=smoke),
     }
     only = args.only.split(",") if args.only else list(suites)
     print("name,us_per_call,derived")

@@ -10,8 +10,11 @@ from repro.core import pr_nibble, seq
 from .common import GRAPH_SUITE, get_graph, emit, timeit
 
 
-def run(alpha=0.01, eps=1e-7):
-    for name in GRAPH_SUITE:
+def run(alpha=0.01, eps=1e-7, smoke: bool = False):
+    graphs = ["sbm-planted"] if smoke else list(GRAPH_SUITE)
+    if smoke:
+        eps = 1e-5
+    for name in graphs:
         g = get_graph(name)
         seed = 5 if name == "sbm-planted" else int(np.argmax(np.asarray(g.deg)))
         us, res = timeit(pr_nibble, g, seed, eps, alpha, repeats=1)

@@ -14,9 +14,12 @@ from repro.core import (nibble, pr_nibble, hk_pr, rand_hk_pr,
 from .common import GRAPH_SUITE, get_graph, emit, timeit
 
 
-def run(fast: bool = True):
-    graphs = ["sbm-planted", "3D-grid-20"] if fast else list(GRAPH_SUITE)
-    walks = 4096 if fast else 1 << 16
+def run(fast: bool = True, smoke: bool = False):
+    if smoke:
+        graphs, walks = ["sbm-planted"], 1024
+    else:
+        graphs = ["sbm-planted", "3D-grid-20"] if fast else list(GRAPH_SUITE)
+        walks = 4096 if fast else 1 << 16
     for name in graphs:
         g = get_graph(name)
         seed = 5 if name == "sbm-planted" else int(np.argmax(np.asarray(g.deg)))

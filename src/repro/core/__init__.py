@@ -15,6 +15,10 @@ from .hk_pr import HKPRResult, hk_pr, hk_pr_fixedcap, psis
 from .rand_hk_pr import RandHKPRResult, rand_hk_pr, poisson_cdf_table
 from .evolving_sets import EvolvingSetsResult, evolving_sets
 from .sparsevec import SparseVec, sv_empty, sv_lookup, sv_merge_add
+from .batched import (BatchedDiffusionResult, BatchedClusterResult,
+                      batched_pr_nibble, batched_hk_pr, batched_cluster,
+                      batched_pr_nibble_fixedcap, batched_hk_pr_fixedcap,
+                      batched_cluster_fixedcap, batched_sweep_cut)
 from .ncp import NCPResult, ncp, ncp_batch
 from . import seq
 
@@ -28,6 +32,10 @@ __all__ = [
     "RandHKPRResult", "rand_hk_pr", "poisson_cdf_table",
     "EvolvingSetsResult", "evolving_sets",
     "SparseVec", "sv_empty", "sv_lookup", "sv_merge_add",
+    "BatchedDiffusionResult", "BatchedClusterResult",
+    "batched_pr_nibble", "batched_hk_pr", "batched_cluster",
+    "batched_pr_nibble_fixedcap", "batched_hk_pr_fixedcap",
+    "batched_cluster_fixedcap", "batched_sweep_cut",
     "NCPResult", "ncp", "ncp_batch",
     "seq",
 ]

@@ -1,0 +1,298 @@
+"""Batched multi-seed local clustering (paper §5's outer parallelism axis).
+
+"A straightforward way to use parallelism is to run many local graph
+computations independently in parallel" — this module makes that the
+first-class path instead of an NCP-only special case.  The fixed-capacity
+frontier drivers (:func:`pr_nibble_fixedcap`, :func:`hk_pr_fixedcap`) and the
+Theorem-1 sweep cut are vmapped over a ``seeds[B]`` axis with *per-seed*
+``(ε, α)`` parameters and *shared* static ``(cap_f, cap_e)`` capacities, so a
+whole batch of queries is one XLA dispatch and one compile-cache entry.
+
+XLA's while-loop batching rule masks finished lanes (the carry is
+``select(pred, new, old)`` per lane), so each lane's state trajectory is
+*identical* to running the single-seed driver — batching changes throughput,
+never results.
+
+Overflow keeps the bucketed-recompilation contract of the single-seed
+drivers, but per seed: lanes whose frontier or edge workspace overflowed are
+repacked into a power-of-two-sized retry batch at the next capacity bucket
+(same doubling schedule as :func:`repro.core.pr_nibble.pr_nibble`, so the
+per-seed results stay bit-identical to the single-seed path).  The whole
+batch therefore compiles at most O(log) distinct bucket shapes, all reused
+from the jit cache across calls — the property `LocalClusterEngine`
+(serve/cluster_engine.py) builds its compiled-shape LRU on.
+"""
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple, Tuple
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.graphs.csr import CSRGraph
+from .frontier import next_pow2
+from .pr_nibble import MAX_ITERS, pr_nibble_fixedcap
+from .hk_pr import hk_pr_fixedcap
+from .sweep import sweep_cut_dense
+
+__all__ = [
+    "BatchedDiffusionResult", "BatchedClusterResult",
+    "batched_pr_nibble_fixedcap", "batched_hk_pr_fixedcap",
+    "batched_sweep_cut", "batched_cluster_fixedcap",
+    "batched_pr_nibble", "batched_hk_pr", "batched_cluster",
+]
+
+
+# ------------------------------------------------------------ jitted kernels
+
+@functools.partial(jax.jit, static_argnums=(4, 5, 6, 7, 8))
+def batched_pr_nibble_fixedcap(graph: CSRGraph, seeds, eps, alpha,
+                               optimized: bool, cap_f: int, cap_e: int,
+                               max_iters: int = MAX_ITERS, beta: float = 1.0):
+    """vmap of :func:`pr_nibble_fixedcap`: seeds[B] with per-seed (eps, alpha).
+
+    Returns a :class:`PRNibbleResult` whose leaves carry a leading [B] axis.
+    """
+    def one(s, e, a):
+        return pr_nibble_fixedcap(graph, s, e, a, optimized, cap_f, cap_e,
+                                  max_iters, beta)
+    return jax.vmap(one)(seeds, eps, alpha)
+
+
+@functools.partial(jax.jit, static_argnums=(2, 4, 5, 6))
+def batched_hk_pr_fixedcap(graph: CSRGraph, seeds, N: int, eps, t: float,
+                           cap_f: int, cap_e: int):
+    """vmap of :func:`hk_pr_fixedcap`: seeds[B] with per-seed eps (N, t static)."""
+    def one(s, e):
+        return hk_pr_fixedcap(graph, s, N, e, t, cap_f, cap_e)
+    return jax.vmap(one)(seeds, eps)
+
+
+@functools.partial(jax.jit, static_argnums=(2, 3))
+def batched_sweep_cut(graph: CSRGraph, p, cap_n: int, cap_e: int):
+    """vmap of :func:`sweep_cut_dense` over p[B, n] diffusion vectors."""
+    return jax.vmap(lambda q: sweep_cut_dense(graph, q, cap_n, cap_e))(p)
+
+
+class _ClusterLanes(NamedTuple):
+    """Per-lane output of the fused diffusion+sweep kernel."""
+    conductance: jnp.ndarray       # f32[B, cap_n] — full sweep curve
+    best_conductance: jnp.ndarray  # f32[B]
+    best_size: jnp.ndarray         # int32[B]
+    best_volume: jnp.ndarray       # int32[B]
+    order: jnp.ndarray             # int32[B, cap_n] — sweep order (cluster prefix)
+    support: jnp.ndarray           # int32[B] — nnz of the diffusion
+    pushes: jnp.ndarray            # int32[B]
+    iterations: jnp.ndarray        # int32[B]
+    overflow: jnp.ndarray          # bool[B] — diffusion OR sweep overflow
+
+
+@functools.partial(jax.jit, static_argnums=(4, 5, 6, 7, 8, 9))
+def batched_cluster_fixedcap(graph: CSRGraph, seeds, eps, alpha,
+                             optimized: bool, cap_f: int, cap_e: int,
+                             cap_n: int, sweep_cap_e: int,
+                             beta: float = 1.0) -> _ClusterLanes:
+    """Fused PR-Nibble + sweep cut per seed — the NCP/serving inner kernel.
+
+    Unlike the plain diffusion kernels this never materializes p[B, n] in the
+    result: each lane reduces to its sweep curve + summary stats.
+    """
+    def one(s, e, a):
+        res = pr_nibble_fixedcap(graph, s, e, a, optimized, cap_f, cap_e,
+                                 MAX_ITERS, beta)
+        sw = sweep_cut_dense(graph, res.p, cap_n, sweep_cap_e)
+        return _ClusterLanes(
+            conductance=sw.conductance,
+            best_conductance=sw.best_conductance,
+            best_size=sw.best_size,
+            best_volume=sw.best_volume,
+            order=sw.order,
+            support=sw.nnz,
+            pushes=res.pushes,
+            iterations=res.iterations,
+            overflow=res.overflow | sw.overflow,
+        )
+    return jax.vmap(one)(seeds, eps, alpha)
+
+
+# ------------------------------------------------- host drivers (per-seed retry)
+
+class BatchedDiffusionResult(NamedTuple):
+    p: np.ndarray           # f32[B, n]
+    r: np.ndarray           # f32[B, n] (zeros for HK-PR, which has no residual out)
+    iterations: np.ndarray  # int32[B]
+    pushes: np.ndarray      # int32[B]
+    edge_work: np.ndarray   # int32[B]
+    overflow: np.ndarray    # bool[B] — True only if max_cap_e was exhausted
+    buckets: Tuple[Tuple[int, int, int], ...]  # (batch, cap_f, cap_e) dispatched
+
+
+class BatchedClusterResult(NamedTuple):
+    conductance: np.ndarray       # f32[B, cap_n] — full sweep curves
+    best_conductance: np.ndarray  # f32[B]
+    best_size: np.ndarray         # int32[B]
+    best_volume: np.ndarray       # int32[B]
+    support: np.ndarray           # int32[B]
+    pushes: np.ndarray            # int32[B]
+    iterations: np.ndarray        # int32[B]
+    overflow: np.ndarray          # bool[B]
+    buckets: Tuple[Tuple[int, int, int], ...]
+
+
+def _prep_batch(seeds, *params):
+    seeds = np.atleast_1d(np.asarray(seeds, np.int32))
+    B = seeds.shape[0]
+    out = [np.broadcast_to(np.asarray(p, np.float32), (B,)).astype(np.float32)
+           for p in params]
+    return (seeds, B, *out)
+
+
+def _retry_sizes(k: int, B: int) -> int:
+    """Retry batches are padded to the next power of two (≤ the original B)
+    so the whole run touches at most O(log B · log cap) compiled shapes."""
+    return min(next_pow2(max(k, 1)), next_pow2(B))
+
+
+def _bucketed_retry(B, dispatch, advance, exhausted, outputs, ovf_out):
+    """Shared per-seed retry ladder for the host drivers.
+
+    ``dispatch(sel)`` runs the current capacity bucket for the padded lane
+    selection ``sel`` and returns ``(fields, bucket)``: ``fields`` maps each
+    output name (plus "overflow") to an np array with leading axis
+    ``len(sel)``; ``bucket`` is the (batch, cap_f, cap_e) key recorded for
+    the compile-shape accounting.  ``advance()`` doubles the capacities;
+    ``exhausted()`` reports the ladder's end (overflowed lanes are then
+    written as-is with their flag set, matching the single-seed drivers).
+    """
+    pending = np.arange(B)
+    buckets = []
+    while True:
+        k = pending.size
+        sel = np.resize(pending, _retry_sizes(k, B))  # pad by cycling lanes
+        fields, bucket = dispatch(sel)
+        buckets.append(bucket)
+        o = np.asarray(fields["overflow"])[:k]
+        final = (not o.any()) or exhausted()
+        done = pending if final else pending[~o]
+        take = slice(None) if final else ~o
+        for name, buf in outputs.items():
+            vals = np.asarray(fields[name])[:k][take]
+            if buf.ndim == 2 and vals.shape[1] != buf.shape[1]:
+                m = min(vals.shape[1], buf.shape[1])  # grown sweep grid
+                buf[done, :m] = vals[:, :m]
+            else:
+                buf[done] = vals
+        ovf_out[done] = o[take]
+        if final:
+            return tuple(buckets)
+        pending = pending[o]
+        advance()
+
+
+class _CapLadder:
+    """The single-seed drivers' doubling schedule, shared by retries."""
+
+    def __init__(self, n, cap_f, cap_e, max_cap_e, cap_n=None, sweep_cap_e=None):
+        self.n, self.cap_f, self.cap_e, self.max_cap_e = n, cap_f, cap_e, max_cap_e
+        self.cap_n, self.sweep_cap_e = cap_n, sweep_cap_e
+
+    def exhausted(self):
+        return self.cap_e >= self.max_cap_e
+
+    def advance(self):
+        self.cap_f = min(self.cap_f * 2, self.n + 1)
+        self.cap_e = self.cap_e * 2
+        if self.cap_n is not None:
+            self.cap_n = min(self.cap_n * 2, self.n)
+        if self.sweep_cap_e is not None:
+            self.sweep_cap_e = self.sweep_cap_e * 2
+
+
+def batched_pr_nibble(graph: CSRGraph, seeds, eps=1e-7, alpha=0.01,
+                      optimized: bool = True, cap_f: int = 1 << 12,
+                      cap_e: int = 1 << 16, max_cap_e: int = 1 << 26,
+                      beta: float = 1.0,
+                      max_iters: int = MAX_ITERS) -> BatchedDiffusionResult:
+    """Batched bucketed driver: one dispatch per capacity bucket, per-seed
+    overflow retry.  Per-seed output is identical to looping
+    :func:`repro.core.pr_nibble.pr_nibble` (same capacity schedule)."""
+    seeds, B, eps, alpha = _prep_batch(seeds, eps, alpha)
+    n = graph.n
+    out = dict(p=np.zeros((B, n), np.float32), r=np.zeros((B, n), np.float32),
+               iterations=np.zeros(B, np.int32), pushes=np.zeros(B, np.int32),
+               edge_work=np.zeros(B, np.int32))
+    ovf = np.zeros(B, bool)
+    lad = _CapLadder(n, cap_f, cap_e, max_cap_e)
+
+    def dispatch(sel):
+        res = batched_pr_nibble_fixedcap(
+            graph, jnp.asarray(seeds[sel]), jnp.asarray(eps[sel]),
+            jnp.asarray(alpha[sel]), optimized, lad.cap_f, lad.cap_e,
+            max_iters, beta)
+        return res._asdict(), (sel.size, lad.cap_f, lad.cap_e)
+
+    buckets = _bucketed_retry(B, dispatch, lad.advance, lad.exhausted, out, ovf)
+    return BatchedDiffusionResult(overflow=ovf, buckets=buckets, **out)
+
+
+def batched_hk_pr(graph: CSRGraph, seeds, N: int = 20, eps=1e-7,
+                  t: float = 10.0, cap_f: int = 1 << 12, cap_e: int = 1 << 16,
+                  max_cap_e: int = 1 << 26) -> BatchedDiffusionResult:
+    """Batched bucketed HK-PR driver, mirroring :func:`batched_pr_nibble`."""
+    seeds, B, eps = _prep_batch(seeds, eps)
+    n = graph.n
+    out = dict(p=np.zeros((B, n), np.float32),
+               iterations=np.zeros(B, np.int32), pushes=np.zeros(B, np.int32),
+               edge_work=np.zeros(B, np.int32))
+    ovf = np.zeros(B, bool)
+    lad = _CapLadder(n, cap_f, cap_e, max_cap_e)
+
+    def dispatch(sel):
+        res = batched_hk_pr_fixedcap(graph, jnp.asarray(seeds[sel]), N,
+                                     jnp.asarray(eps[sel]), t,
+                                     lad.cap_f, lad.cap_e)
+        return res._asdict(), (sel.size, lad.cap_f, lad.cap_e)
+
+    buckets = _bucketed_retry(B, dispatch, lad.advance, lad.exhausted, out, ovf)
+    return BatchedDiffusionResult(r=np.zeros((B, n), np.float32),
+                                  overflow=ovf, buckets=buckets, **out)
+
+
+def batched_cluster(graph: CSRGraph, seeds, eps=1e-6, alpha=0.01,
+                    optimized: bool = True, cap_f: int = 1 << 12,
+                    cap_e: int = 1 << 16, cap_n: int = 1 << 12,
+                    sweep_cap_e: int = 1 << 18, max_cap_e: int = 1 << 26,
+                    beta: float = 1.0) -> BatchedClusterResult:
+    """Batched PR-Nibble + sweep with per-seed retry on *either* the
+    diffusion or sweep workspace overflowing (all capacities double).
+
+    Sweep curves are reported on the fixed ``min(cap_n, n)`` grid of the
+    first bucket so the NCP accumulator sees one consistent size axis.
+    """
+    seeds, B, eps, alpha = _prep_batch(seeds, eps, alpha)
+    n = graph.n
+    grid = min(cap_n, n)
+    out = dict(conductance=np.full((B, grid), np.inf, np.float32),
+               best_conductance=np.full(B, np.inf, np.float32),
+               best_size=np.zeros(B, np.int32),
+               best_volume=np.zeros(B, np.int32),
+               support=np.zeros(B, np.int32),
+               pushes=np.zeros(B, np.int32),
+               iterations=np.zeros(B, np.int32))
+    ovf = np.zeros(B, bool)
+    lad = _CapLadder(n, cap_f, cap_e, max_cap_e, cap_n=grid,
+                     sweep_cap_e=sweep_cap_e)
+
+    def dispatch(sel):
+        res = batched_cluster_fixedcap(
+            graph, jnp.asarray(seeds[sel]), jnp.asarray(eps[sel]),
+            jnp.asarray(alpha[sel]), optimized, lad.cap_f, lad.cap_e,
+            min(lad.cap_n, n), lad.sweep_cap_e, beta)
+        fields = res._asdict()
+        fields.pop("order")            # not part of the host result
+        return fields, (sel.size, lad.cap_f, lad.cap_e)
+
+    buckets = _bucketed_retry(B, dispatch, lad.advance, lad.exhausted, out, ovf)
+    return BatchedClusterResult(overflow=ovf, buckets=buckets, **out)

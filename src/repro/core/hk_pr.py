@@ -24,7 +24,8 @@ import jax.numpy as jnp
 from repro.graphs.csr import CSRGraph
 from .frontier import Frontier, expand, pack_unique, singleton, scatter_add_dense
 
-__all__ = ["HKPRResult", "hk_pr", "hk_pr_fixedcap", "psis"]
+__all__ = ["HKPRResult", "HKPRState", "hk_pr", "hk_pr_fixedcap", "psis",
+           "hk_pr_init", "hk_pr_round", "hk_pr_alive"]
 
 
 def psis(N: int, t: float) -> np.ndarray:
@@ -42,7 +43,9 @@ class HKPRResult(NamedTuple):
     overflow: jnp.ndarray
 
 
-class _State(NamedTuple):
+class HKPRState(NamedTuple):
+    """Loop carry of one hk-relax run — exposed so batched/streaming drivers
+    (core/batched.py, serve/cluster_engine.py) can step the same rounds."""
     p: jnp.ndarray
     r: jnp.ndarray
     frontier: Frontier
@@ -53,67 +56,83 @@ class _State(NamedTuple):
     overflow: jnp.ndarray
 
 
-@functools.partial(jax.jit, static_argnums=(2, 4, 5, 6))
-def hk_pr_fixedcap(graph: CSRGraph, x, N: int, eps, t: float,
-                   cap_f: int, cap_e: int) -> HKPRResult:
-    """t is static: the ψ table is precomputed host-side in float64."""
+def hk_pr_init(x, n: int, cap_f: int) -> HKPRState:
+    r0 = jnp.zeros((n,), jnp.float32).at[x].set(1.0)
+    return HKPRState(p=jnp.zeros((n,), jnp.float32), r=r0,
+                     frontier=singleton(x, n, cap_f),
+                     j=jnp.asarray(0, jnp.int32),
+                     pushes=jnp.asarray(0, jnp.int32),
+                     edge_work=jnp.asarray(0, jnp.int32),
+                     done=jnp.asarray(False),
+                     overflow=jnp.asarray(False))
+
+
+def hk_pr_alive(s: HKPRState) -> jnp.ndarray:
+    return (~s.done) & (~s.overflow) & (s.frontier.count > 0)
+
+
+def hk_pr_round(graph: CSRGraph, s: HKPRState, N: int, eps, t: float,
+                cap_e: int) -> HKPRState:
+    """One Taylor level (the while-loop body of Figure 5).  ``N`` and ``t``
+    are trace-time constants: the ψ table is precomputed host-side in
+    float64."""
     n = graph.n
     deg = graph.deg
     psi_table = jnp.asarray(psis(N, float(t)), jnp.float32)
     scale = jnp.exp(jnp.asarray(t, jnp.float32))
 
-    def cond(s: _State):
-        return (~s.done) & (~s.overflow) & (s.frontier.count > 0)
+    f = s.frontier
+    fvalid = f.valid()
+    fids = jnp.where(fvalid, f.ids, n)
+    safe = jnp.minimum(fids, n - 1)
+    rf = jnp.where(fvalid, s.r[safe], 0.0)
+    dv = jnp.maximum(deg[safe], 1)
 
-    def body(s: _State) -> _State:
-        f = s.frontier
-        fvalid = f.valid()
-        fids = jnp.where(fvalid, f.ids, n)
-        safe = jnp.minimum(fids, n - 1)
-        rf = jnp.where(fvalid, s.r[safe], 0.0)
-        dv = jnp.maximum(deg[safe], 1)
+    # VERTEXMAP (UpdateSelf): p[v] += r[v]
+    p_new = scatter_add_dense(s.p, fids, rf, fvalid)
 
-        # VERTEXMAP (UpdateSelf): p[v] += r[v]
-        p_new = scatter_add_dense(s.p, fids, rf, fvalid)
+    eb = expand(graph, f, cap_e)
+    last = s.j + 1 >= N
 
-        eb = expand(graph, f, cap_e)
-        last = s.j + 1 >= N
+    # last round (UpdateNghLast): p[w] += r[v]/d(v), then stop
+    contrib_last = rf[eb.slot] / dv[eb.slot]
+    p_last = scatter_add_dense(p_new, eb.dst, contrib_last, eb.valid)
 
-        # last round (UpdateNghLast): p[w] += r[v]/d(v), then stop
-        contrib_last = rf[eb.slot] / dv[eb.slot]
-        p_last = scatter_add_dense(p_new, eb.dst, contrib_last, eb.valid)
+    # normal round (UpdateNgh): r'[w] += t·r[v]/((j+1)·d(v)); fresh r'
+    contrib = (t * rf[eb.slot]) / ((s.j + 1.0) * dv[eb.slot])
+    r_next = jnp.zeros_like(s.r)
+    r_next = scatter_add_dense(r_next, eb.dst, contrib, eb.valid)
 
-        # normal round (UpdateNgh): r'[w] += t·r[v]/((j+1)·d(v)); fresh r'
-        contrib = (t * rf[eb.slot]) / ((s.j + 1.0) * dv[eb.slot])
-        r_next = jnp.zeros_like(s.r)
-        r_next = scatter_add_dense(r_next, eb.dst, contrib, eb.valid)
+    # frontier for level j+1: r'[v] ≥ eᵗ ε d(v) / (2N ψ_{j+1})
+    thresh_coef = scale * eps / (2.0 * N * psi_table[jnp.minimum(s.j + 1, N)])
+    cands = eb.dst
+    csafe = jnp.minimum(cands, n - 1)
+    keep = eb.valid & (deg[csafe] > 0) & \
+        (r_next[csafe] >= deg[csafe] * thresh_coef)
+    nf = pack_unique(cands, keep, n, s.frontier.cap)
 
-        # frontier for level j+1: r'[v] ≥ eᵗ ε d(v) / (2N ψ_{j+1})
-        thresh_coef = scale * eps / (2.0 * N * psi_table[jnp.minimum(s.j + 1, N)])
-        cands = eb.dst
-        csafe = jnp.minimum(cands, n - 1)
-        keep = eb.valid & (deg[csafe] > 0) & \
-            (r_next[csafe] >= deg[csafe] * thresh_coef)
-        nf = pack_unique(cands, keep, n, cap_f)
+    return HKPRState(
+        p=jnp.where(last, p_last, p_new),
+        r=jnp.where(last, s.r, r_next),
+        frontier=nf,
+        j=s.j + 1,
+        pushes=s.pushes + f.count,
+        edge_work=s.edge_work + eb.total,
+        done=last,
+        overflow=s.overflow | eb.overflow | (nf.overflow & ~last),
+    )
 
-        return _State(
-            p=jnp.where(last, p_last, p_new),
-            r=jnp.where(last, s.r, r_next),
-            frontier=nf,
-            j=s.j + 1,
-            pushes=s.pushes + f.count,
-            edge_work=s.edge_work + eb.total,
-            done=last,
-            overflow=s.overflow | eb.overflow | (nf.overflow & ~last),
-        )
 
-    r0 = jnp.zeros((n,), jnp.float32).at[x].set(1.0)
-    s0 = _State(p=jnp.zeros((n,), jnp.float32), r=r0,
-                frontier=singleton(x, n, cap_f),
-                j=jnp.asarray(0, jnp.int32), pushes=jnp.asarray(0, jnp.int32),
-                edge_work=jnp.asarray(0, jnp.int32), done=jnp.asarray(False),
-                overflow=jnp.asarray(False))
-    s = jax.lax.while_loop(cond, body, s0)
+@functools.partial(jax.jit, static_argnums=(2, 4, 5, 6))
+def hk_pr_fixedcap(graph: CSRGraph, x, N: int, eps, t: float,
+                   cap_f: int, cap_e: int) -> HKPRResult:
+    def cond(s: HKPRState):
+        return hk_pr_alive(s)
+
+    def body(s: HKPRState) -> HKPRState:
+        return hk_pr_round(graph, s, N, eps, t, cap_e)
+
+    s = jax.lax.while_loop(cond, body, hk_pr_init(x, graph.n, cap_f))
     return HKPRResult(p=s.p, iterations=s.j, pushes=s.pushes,
                       edge_work=s.edge_work, overflow=s.overflow)
 

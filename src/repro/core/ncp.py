@@ -5,23 +5,23 @@ generates it by running PR-Nibble from 10⁵ random seeds over a grid of
 (α, ε) and sweeping each output — "a straightforward way to use parallelism
 is to run many local graph computations independently in parallel".
 
-Here that outer loop is *vmapped*: a whole batch of seeds runs as one XLA
-program (each inner while_loop steps until every lane finishes), and batches
-are sharded over the `data` mesh axis by the distributed launcher.  This is
+The outer loop rides the batched multi-seed subsystem
+(:mod:`repro.core.batched`): each batch of seeds runs as one XLA program
+through the fused diffusion+sweep kernel, and seeds whose frontier
+overflowed the capacity bucket are retried at the next power-of-two bucket
+instead of being dropped — every seed contributes to the profile.  Batches
+are sharded over the `data` mesh axis by the distributed launcher; this is
 the multi-pod embodiment of the paper's interactive-analytics workload.
 """
 from __future__ import annotations
 
-import functools
 from typing import NamedTuple
 
 import numpy as np
-import jax
 import jax.numpy as jnp
 
 from repro.graphs.csr import CSRGraph
-from .pr_nibble import pr_nibble_fixedcap
-from .sweep import sweep_cut_dense
+from .batched import batched_cluster, batched_cluster_fixedcap
 
 __all__ = ["NCPResult", "ncp_batch", "ncp"]
 
@@ -32,21 +32,18 @@ class NCPResult(NamedTuple):
     num_runs: int
 
 
-@functools.partial(jax.jit, static_argnums=(3, 4, 5, 6))
 def ncp_batch(graph: CSRGraph, seeds: jnp.ndarray, params: jnp.ndarray,
               cap_f: int, cap_e: int, cap_n: int, sweep_cap_e: int):
     """One vmapped batch: seeds[i] with (eps, alpha) = params[i].
 
-    Returns per-run (sizes[cap_n], conductances[cap_n], overflow) — the
-    full sweep curve so every prefix feeds the NCP, not just the argmin.
+    Kept for API compatibility; delegates to the fused batched kernel.
+    Returns per-run (conductances[cap_n], support, overflow) — the full
+    sweep curve so every prefix feeds the NCP, not just the argmin.
     """
-    def one(seed, par):
-        eps, alpha = par[0], par[1]
-        res = pr_nibble_fixedcap(graph, seed, eps, alpha, True, cap_f, cap_e)
-        sw = sweep_cut_dense(graph, res.p, cap_n, sweep_cap_e)
-        return sw.conductance, sw.nnz, res.overflow | sw.overflow
-
-    return jax.vmap(one)(seeds, params)
+    out = batched_cluster_fixedcap(graph, seeds, params[:, 0], params[:, 1],
+                                   True, cap_f, cap_e, min(cap_n, graph.n),
+                                   sweep_cap_e)
+    return out.conductance, out.support, out.overflow
 
 
 def ncp(graph: CSRGraph, num_seeds: int = 256,
@@ -54,7 +51,8 @@ def ncp(graph: CSRGraph, num_seeds: int = 256,
         batch: int = 64, seed: int = 0,
         cap_f: int = 1 << 12, cap_e: int = 1 << 16,
         cap_n: int = 1 << 12, sweep_cap_e: int = 1 << 18) -> NCPResult:
-    """Host driver: grid of (seed, α, ε) runs, batched + vmapped."""
+    """Host driver: grid of (seed, α, ε) runs through the batched engine
+    (per-seed overflow retry included)."""
     rng = np.random.default_rng(seed)
     deg = np.asarray(graph.deg)
     nonzero = np.flatnonzero(deg > 0)
@@ -66,16 +64,15 @@ def ncp(graph: CSRGraph, num_seeds: int = 256,
     runs = 0
     for (eps, alpha) in grid:
         for lo in range(0, num_seeds, batch):
-            sb = jnp.asarray(seeds[lo: lo + batch])
+            sb = seeds[lo: lo + batch]
             if sb.shape[0] < batch:  # pad final batch
-                sb = jnp.concatenate([sb, jnp.repeat(sb[:1], batch - sb.shape[0])])
-            pars = jnp.tile(jnp.asarray([[eps, alpha]], jnp.float32), (batch, 1))
-            conds, nnzs, ovf = ncp_batch(graph, sb, pars, cap_f, cap_e,
-                                         cap_n, sweep_cap_e)
-            conds = np.array(conds)           # writable copy off-device
-            ok = ~np.asarray(ovf)
-            conds[~ok] = np.inf
-            best = np.minimum(best, conds.min(axis=0))
+                sb = np.concatenate([sb, np.repeat(sb[:1], batch - sb.shape[0])])
+            out = batched_cluster(graph, sb, eps, alpha, cap_f=cap_f,
+                                  cap_e=cap_e, cap_n=cap_n,
+                                  sweep_cap_e=sweep_cap_e)
+            ok = ~out.overflow
+            curves = np.where(ok[:, None], out.conductance, np.inf)
+            best = np.minimum(best, curves.min(axis=0))
             runs += int(ok.sum())
     sizes = np.arange(1, cap_n + 1)
     return NCPResult(sizes=sizes, best_conductance=best, num_runs=runs)

@@ -39,7 +39,12 @@ from repro.graphs.csr import CSRGraph
 from .frontier import (Frontier, expand, pack_unique, singleton,
                        seed_set, scatter_add_dense)
 
-__all__ = ["PRNibbleResult", "pr_nibble", "pr_nibble_fixedcap"]
+__all__ = ["PRNibbleResult", "PRNibbleState", "pr_nibble", "pr_nibble_fixedcap",
+           "pr_nibble_init", "pr_nibble_round", "pr_nibble_alive", "MAX_ITERS"]
+
+# Round budget shared by every driver that must stay bit-identical to this
+# one (core/batched.py, serve/cluster_engine.py import it).
+MAX_ITERS = 10_000
 
 
 class PRNibbleResult(NamedTuple):
@@ -51,7 +56,9 @@ class PRNibbleResult(NamedTuple):
     overflow: jnp.ndarray    # bool
 
 
-class _State(NamedTuple):
+class PRNibbleState(NamedTuple):
+    """Loop carry of one PR-Nibble run — exposed so batched/streaming drivers
+    (core/batched.py, serve/cluster_engine.py) can step the same rounds."""
     p: jnp.ndarray
     r: jnp.ndarray
     frontier: Frontier
@@ -61,72 +68,10 @@ class _State(NamedTuple):
     overflow: jnp.ndarray
 
 
-@functools.partial(jax.jit, static_argnums=(4, 5, 6, 7, 8))
-def pr_nibble_fixedcap(graph: CSRGraph, x, eps, alpha,
-                       optimized: bool, cap_f: int, cap_e: int,
-                       max_iters: int = 10_000, beta: float = 1.0) -> PRNibbleResult:
-    n = graph.n
-    deg = graph.deg
-
-    def cond(s: _State):
-        return (s.frontier.count > 0) & (~s.overflow) & (s.t < max_iters)
-
-    def body(s: _State) -> _State:
-        f = s.frontier
-        fvalid = f.valid()
-        fids = jnp.where(fvalid, f.ids, n)
-        safe = jnp.minimum(fids, n - 1)
-        all_fids, all_fvalid = fids, fvalid  # full frontier (pre-β) for re-filter
-
-        if beta < 1.0:
-            # β-selection: push only the top β-fraction by r/d (paper's
-            # work-vs-parallelism trade-off variant)
-            r_over_d = jnp.where(fvalid, s.r[safe] / jnp.maximum(deg[safe], 1),
-                                 -jnp.inf)
-            k = jnp.maximum(jnp.ceil(beta * f.count), 1.0).astype(jnp.int32)
-            kth = -jnp.sort(-r_over_d)[jnp.minimum(k - 1, f.cap - 1)]
-            sel = fvalid & (r_over_d >= kth)
-            # re-pack: Frontier validity is prefix-based, so the selected ids
-            # must be compacted to the front
-            f = pack_unique(fids, sel, n, f.cap)
-            fvalid = f.valid()
-            fids = jnp.where(fvalid, f.ids, n)
-            safe = jnp.minimum(fids, n - 1)
-
-        rf = jnp.where(fvalid, s.r[safe], 0.0)
-        dv = jnp.maximum(deg[safe], 1)
-
-        if optimized:
-            p_gain = (2.0 * alpha / (1.0 + alpha)) * rf
-            r_self = jnp.zeros_like(rf)
-            share = ((1.0 - alpha) / (1.0 + alpha)) * rf / dv
-        else:
-            p_gain = alpha * rf
-            r_self = (1.0 - alpha) * rf / 2.0
-            share = (1.0 - alpha) * rf / (2.0 * dv)
-
-        p_new = scatter_add_dense(s.p, fids, p_gain, fvalid)
-        # r' starts as r with frontier entries replaced (double buffer)
-        r_new = s.r.at[jnp.where(fvalid, fids, n)].set(
-            jnp.where(fvalid, r_self, 0.0), mode="drop")
-
-        eb = expand(graph, f, cap_e)
-        contrib = share[eb.slot]
-        r_new = scatter_add_dense(r_new, eb.dst, contrib, eb.valid)
-
-        cands = jnp.concatenate([all_fids, eb.dst])
-        cvalid = jnp.concatenate([all_fvalid, eb.valid])
-        csafe = jnp.minimum(cands, n - 1)
-        keep = cvalid & (deg[csafe] > 0) & (r_new[csafe] >= deg[csafe] * eps)
-        nf = pack_unique(cands, keep, n, cap_f)
-
-        return _State(p=p_new, r=r_new, frontier=nf, t=s.t + 1,
-                      pushes=s.pushes + f.count,
-                      edge_work=s.edge_work + eb.total,
-                      overflow=s.overflow | nf.overflow | eb.overflow)
-
+def pr_nibble_init(x, n: int, cap_f: int) -> PRNibbleState:
+    """Initial state: unit residual mass on the seed (or 1/k per seed-set
+    vertex, paper footnote 3) and the seed frontier."""
     if isinstance(x, tuple):
-        # multi-vertex seed set (paper footnote 3): mass 1/k on each seed
         seeds, count = x
         seeds = jnp.asarray(seeds, jnp.int32)
         valid = jnp.arange(seeds.shape[0]) < count
@@ -137,11 +82,90 @@ def pr_nibble_fixedcap(graph: CSRGraph, x, eps, alpha,
     else:
         r0 = jnp.zeros((n,), jnp.float32).at[x].set(1.0)
         front0 = singleton(x, n, cap_f)
-    s0 = _State(p=jnp.zeros((n,), jnp.float32), r=r0,
-                frontier=front0,
-                t=jnp.asarray(0, jnp.int32), pushes=jnp.asarray(0, jnp.int32),
-                edge_work=jnp.asarray(0, jnp.int32), overflow=jnp.asarray(False))
-    s = jax.lax.while_loop(cond, body, s0)
+    return PRNibbleState(p=jnp.zeros((n,), jnp.float32), r=r0,
+                         frontier=front0,
+                         t=jnp.asarray(0, jnp.int32),
+                         pushes=jnp.asarray(0, jnp.int32),
+                         edge_work=jnp.asarray(0, jnp.int32),
+                         overflow=jnp.asarray(False))
+
+
+def pr_nibble_alive(s: PRNibbleState, max_iters: int = MAX_ITERS) -> jnp.ndarray:
+    """True while the run still has above-threshold residual to push."""
+    return (s.frontier.count > 0) & (~s.overflow) & (s.t < max_iters)
+
+
+def pr_nibble_round(graph: CSRGraph, s: PRNibbleState, eps, alpha,
+                    optimized: bool, cap_e: int,
+                    beta: float = 1.0) -> PRNibbleState:
+    """One synchronous push round (the while-loop body of Figures 3–4)."""
+    n = graph.n
+    deg = graph.deg
+    f = s.frontier
+    fvalid = f.valid()
+    fids = jnp.where(fvalid, f.ids, n)
+    safe = jnp.minimum(fids, n - 1)
+    all_fids, all_fvalid = fids, fvalid  # full frontier (pre-β) for re-filter
+
+    if beta < 1.0:
+        # β-selection: push only the top β-fraction by r/d (paper's
+        # work-vs-parallelism trade-off variant)
+        r_over_d = jnp.where(fvalid, s.r[safe] / jnp.maximum(deg[safe], 1),
+                             -jnp.inf)
+        k = jnp.maximum(jnp.ceil(beta * f.count), 1.0).astype(jnp.int32)
+        kth = -jnp.sort(-r_over_d)[jnp.minimum(k - 1, f.cap - 1)]
+        sel = fvalid & (r_over_d >= kth)
+        # re-pack: Frontier validity is prefix-based, so the selected ids
+        # must be compacted to the front
+        f = pack_unique(fids, sel, n, f.cap)
+        fvalid = f.valid()
+        fids = jnp.where(fvalid, f.ids, n)
+        safe = jnp.minimum(fids, n - 1)
+
+    rf = jnp.where(fvalid, s.r[safe], 0.0)
+    dv = jnp.maximum(deg[safe], 1)
+
+    if optimized:
+        p_gain = (2.0 * alpha / (1.0 + alpha)) * rf
+        r_self = jnp.zeros_like(rf)
+        share = ((1.0 - alpha) / (1.0 + alpha)) * rf / dv
+    else:
+        p_gain = alpha * rf
+        r_self = (1.0 - alpha) * rf / 2.0
+        share = (1.0 - alpha) * rf / (2.0 * dv)
+
+    p_new = scatter_add_dense(s.p, fids, p_gain, fvalid)
+    # r' starts as r with frontier entries replaced (double buffer)
+    r_new = s.r.at[jnp.where(fvalid, fids, n)].set(
+        jnp.where(fvalid, r_self, 0.0), mode="drop")
+
+    eb = expand(graph, f, cap_e)
+    contrib = share[eb.slot]
+    r_new = scatter_add_dense(r_new, eb.dst, contrib, eb.valid)
+
+    cands = jnp.concatenate([all_fids, eb.dst])
+    cvalid = jnp.concatenate([all_fvalid, eb.valid])
+    csafe = jnp.minimum(cands, n - 1)
+    keep = cvalid & (deg[csafe] > 0) & (r_new[csafe] >= deg[csafe] * eps)
+    nf = pack_unique(cands, keep, n, s.frontier.cap)
+
+    return PRNibbleState(p=p_new, r=r_new, frontier=nf, t=s.t + 1,
+                         pushes=s.pushes + f.count,
+                         edge_work=s.edge_work + eb.total,
+                         overflow=s.overflow | nf.overflow | eb.overflow)
+
+
+@functools.partial(jax.jit, static_argnums=(4, 5, 6, 7, 8))
+def pr_nibble_fixedcap(graph: CSRGraph, x, eps, alpha,
+                       optimized: bool, cap_f: int, cap_e: int,
+                       max_iters: int = MAX_ITERS, beta: float = 1.0) -> PRNibbleResult:
+    def cond(s: PRNibbleState):
+        return pr_nibble_alive(s, max_iters)
+
+    def body(s: PRNibbleState) -> PRNibbleState:
+        return pr_nibble_round(graph, s, eps, alpha, optimized, cap_e, beta)
+
+    s = jax.lax.while_loop(cond, body, pr_nibble_init(x, graph.n, cap_f))
     return PRNibbleResult(p=s.p, r=s.r, iterations=s.t, pushes=s.pushes,
                           edge_work=s.edge_work, overflow=s.overflow)
 

@@ -36,7 +36,7 @@ from repro.models import build_model, batch_axes
 from repro.models.model import make_batch_specs
 from repro.train import AdamWConfig, make_train_step, adamw_init
 from repro.launch.mesh import make_production_mesh
-from repro.launch.roofline import roofline_report, HW
+from repro.launch.roofline import roofline_report, cost_analysis_dict, HW
 
 OUT_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "..",
                        "experiments", "dryrun")
@@ -174,7 +174,7 @@ def run_cell(arch: str, shape_name: str, mesh_name: str,
         t_compile = time.time() - t0
         mem = compiled.memory_analysis()
         print(f"[{key}] memory_analysis: {mem}", flush=True)
-        ca = compiled.cost_analysis()
+        ca = cost_analysis_dict(compiled)
         print(f"[{key}] cost: flops={ca.get('flops', 0):.3e} "
               f"bytes={ca.get('bytes accessed', 0):.3e}", flush=True)
         rep = roofline_report(compiled, chips=meta["chips"],

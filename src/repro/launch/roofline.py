@@ -24,7 +24,17 @@ import dataclasses
 import re
 from typing import Dict, Optional
 
-__all__ = ["HW", "collective_bytes", "roofline_report"]
+__all__ = ["HW", "collective_bytes", "cost_analysis_dict", "roofline_report"]
+
+
+def cost_analysis_dict(compiled) -> Dict:
+    """``compiled.cost_analysis()`` across jax versions: older jaxlibs return
+    a one-dict-per-device list, newer ones a flat dict.  Normalize to a dict
+    (the per-chip module is identical post-SPMD, so device 0 suffices)."""
+    ca = compiled.cost_analysis()
+    if isinstance(ca, (list, tuple)):
+        ca = ca[0] if ca else {}
+    return ca
 
 
 @dataclasses.dataclass(frozen=True)
@@ -118,7 +128,7 @@ def roofline_report(compiled, *, hw: HW = HW(), chips: int,
                     model_flops: Optional[float] = None,
                     hlo_text: Optional[str] = None) -> Dict:
     from .hlocost import analyze_hlo
-    ca = compiled.cost_analysis()
+    ca = cost_analysis_dict(compiled)
     text = hlo_text if hlo_text is not None else compiled.as_text()
     # trip-count-aware walker (hlocost.py): XLA's cost_analysis counts scan
     # bodies once; the walker multiplies by known_trip_count.

@@ -1,3 +1,5 @@
 from .engine import ServeConfig, generate, batched_serve
+from .cluster_engine import ClusterRequest, ClusterResult, LocalClusterEngine
 
-__all__ = ["ServeConfig", "generate", "batched_serve"]
+__all__ = ["ServeConfig", "generate", "batched_serve",
+           "ClusterRequest", "ClusterResult", "LocalClusterEngine"]

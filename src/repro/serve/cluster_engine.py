@@ -1,0 +1,355 @@
+"""Local clustering as a service: continuous batching over seed queries.
+
+``LocalClusterEngine`` is the graph-query analogue of ``engine.py``'s
+``batched_serve``: a queue of :class:`ClusterRequest`\\ s (seed, α, ε, method)
+is packed into a fixed number of batch *lanes*; every scheduler tick advances
+all active lanes a bounded number of push rounds through one jitted kernel,
+finished lanes are harvested (swept for their best cut) and immediately
+refilled from the queue — *without recompiling*, because lane count and
+frontier capacities are static shapes and refill is a dynamic-index
+injection into the batched state.
+
+Requests with heterogeneous (α, ε) share one lane pool; only genuinely
+trace-level choices (method, update rule, β, HK's (N, t)) and the capacity
+*bucket* select a pool.  Lanes that overflow their bucket's ``(cap_f,
+cap_e)`` workspace are re-enqueued one power-of-two bucket up (the bucketed
+recompilation contract of core/frontier.py), so a request stream compiles at
+most O(log) distinct shapes per method.  Idle pools beyond ``lru_pools`` are
+evicted least-recently-used to bound device memory; XLA's jit cache keeps
+the compiled kernels, so re-creating an evicted pool is cheap.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from collections import OrderedDict, deque
+from typing import Dict, List, Optional, Tuple
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.graphs.csr import CSRGraph
+from repro.core.pr_nibble import (MAX_ITERS, pr_nibble_init,
+                                  pr_nibble_round, pr_nibble_alive)
+from repro.core.hk_pr import hk_pr_init, hk_pr_round, hk_pr_alive
+from repro.core.sweep import sweep_cut_dense
+
+__all__ = ["ClusterRequest", "ClusterResult", "LocalClusterEngine"]
+
+
+@dataclasses.dataclass(frozen=True)
+class ClusterRequest:
+    """One local-clustering query: which seed, which diffusion, which knobs."""
+    seed: int
+    alpha: float = 0.01        # PR-Nibble teleport
+    eps: float = 1e-6          # approximation / truncation threshold
+    method: str = "pr_nibble"  # "pr_nibble" | "hk_pr"
+    optimized: bool = True     # PR-Nibble update rule (Fig 3 vs Fig 4)
+    beta: float = 1.0          # PR-Nibble top-β round selection
+    N: int = 10                # HK-PR Taylor degree
+    t: float = 5.0             # HK-PR temperature
+
+
+@dataclasses.dataclass
+class ClusterResult:
+    request: ClusterRequest
+    conductance: float         # φ of the best sweep prefix
+    size: int                  # |S*|
+    volume: int                # vol(S*)
+    support: int               # nnz of the diffusion vector
+    cluster: np.ndarray        # int32[size] — member vertex ids
+    pushes: int
+    iterations: int
+    bucket: int                # capacity bucket that served the request
+    overflow: bool             # True only if every bucket overflowed
+
+
+# --------------------------------------------------------------- step kernels
+# Module-level jits: every pool with the same (slots, caps, statics) shape
+# hits the same compile-cache entry, engine instances included.
+
+@functools.partial(jax.jit, static_argnums=(5, 6, 7, 8))
+def _prn_step(graph, state, eps, alpha, active, rounds: int,
+              optimized: bool, cap_e: int, beta: float):
+    """Advance each active lane up to ``rounds`` PR-Nibble push rounds."""
+    def one(s, e, a, act):
+        def cond(c):
+            s2, k = c
+            return act & (k < rounds) & pr_nibble_alive(s2, MAX_ITERS)
+
+        def body(c):
+            s2, k = c
+            return (pr_nibble_round(graph, s2, e, a, optimized, cap_e, beta),
+                    k + 1)
+
+        s2, _ = jax.lax.while_loop(cond, body, (s, jnp.asarray(0, jnp.int32)))
+        return s2
+    return jax.vmap(one)(state, eps, alpha, active)
+
+
+@functools.partial(jax.jit, static_argnums=(4, 5, 6, 7))
+def _hk_step(graph, state, eps, active, rounds: int, N: int, t: float,
+             cap_e: int):
+    """Advance each active lane up to ``rounds`` HK-PR Taylor levels."""
+    def one(s, e, act):
+        def cond(c):
+            s2, k = c
+            return act & (k < rounds) & hk_pr_alive(s2)
+
+        def body(c):
+            s2, k = c
+            return hk_pr_round(graph, s2, N, e, t, cap_e), k + 1
+
+        s2, _ = jax.lax.while_loop(cond, body, (s, jnp.asarray(0, jnp.int32)))
+        return s2
+    return jax.vmap(one)(state, eps, active)
+
+
+@functools.partial(jax.jit, static_argnums=(3, 4))
+def _prn_inject(state, lane, seed, n: int, cap_f: int):
+    """Reset one lane to a fresh seed — dynamic lane/seed, so no recompile."""
+    return jax.tree.map(lambda buf, v: buf.at[lane].set(v),
+                        state, pr_nibble_init(seed, n, cap_f))
+
+
+@functools.partial(jax.jit, static_argnums=(3, 4))
+def _hk_inject(state, lane, seed, n: int, cap_f: int):
+    return jax.tree.map(lambda buf, v: buf.at[lane].set(v),
+                        state, hk_pr_init(seed, n, cap_f))
+
+
+# ----------------------------------------------------------------- lane pool
+
+class _Pool:
+    """Fixed-shape lane pool for one (method, statics, capacity bucket)."""
+
+    def __init__(self, engine: "LocalClusterEngine", method: str,
+                 statics: tuple, bucket: int):
+        self.engine = engine
+        self.method = method
+        self.statics = statics
+        self.bucket = bucket
+        n = engine.graph.n
+        self.cap_f = min(engine.cap_f << bucket, n + 1)
+        self.cap_e = engine.cap_e << bucket
+        self.cap_n = min(engine.cap_n << bucket, n)
+        self.sweep_cap_e = engine.sweep_cap_e << bucket
+        B = engine.batch_slots
+        init = pr_nibble_init if method == "pr_nibble" else hk_pr_init
+        # lanes start inactive; injected states overwrite these placeholders
+        self.state = jax.vmap(lambda s: init(s, n, self.cap_f))(
+            jnp.zeros((B,), jnp.int32))
+        self.eps = np.zeros(B, np.float32)
+        self.alpha = np.zeros(B, np.float32)
+        self.lane: List[Optional[Tuple[int, ClusterRequest]]] = [None] * B
+        self.queue: deque = deque()
+        engine.stats["pools_created"] += 1
+        engine.stats["bucket_shapes"].add((method, B, self.cap_f, self.cap_e))
+
+    def has_work(self) -> bool:
+        return bool(self.queue) or any(l is not None for l in self.lane)
+
+    def refill(self) -> None:
+        n = self.engine.graph.n
+        inject = _prn_inject if self.method == "pr_nibble" else _hk_inject
+        for i in range(len(self.lane)):
+            if self.lane[i] is not None or not self.queue:
+                continue
+            idx, req = self.queue.popleft()
+            self.lane[i] = (idx, req)
+            self.eps[i] = req.eps
+            self.alpha[i] = req.alpha
+            self.state = inject(self.state, jnp.asarray(i, jnp.int32),
+                                jnp.asarray(req.seed, jnp.int32),
+                                n, self.cap_f)
+            self.engine.stats["injections"] += 1
+
+    def step(self) -> None:
+        active = np.array([l is not None for l in self.lane])
+        if not active.any():
+            return
+        g = self.engine.graph
+        rounds = self.engine.rounds_per_step
+        if self.method == "pr_nibble":
+            optimized, beta = self.statics
+            self.state = _prn_step(g, self.state, jnp.asarray(self.eps),
+                                   jnp.asarray(self.alpha),
+                                   jnp.asarray(active), rounds,
+                                   optimized, self.cap_e, beta)
+        else:
+            N, t = self.statics
+            self.state = _hk_step(g, self.state, jnp.asarray(self.eps),
+                                  jnp.asarray(active), rounds, N, t,
+                                  self.cap_e)
+        self.engine.stats["steps"] += 1
+
+    def harvest(self) -> None:
+        st = self.state
+        count = np.asarray(st.frontier.count)
+        ovf = np.asarray(st.overflow)
+        if self.method == "pr_nibble":
+            finished = (count == 0) | ovf | (np.asarray(st.t) >= MAX_ITERS)
+        else:
+            finished = (count == 0) | ovf | np.asarray(st.done)
+        for i, slot in enumerate(self.lane):
+            if slot is None or not finished[i]:
+                continue
+            idx, req = slot
+            self.lane[i] = None
+            if ovf[i] and self.engine._promote(idx, req, self.bucket):
+                continue
+            self.engine._complete(idx, self._finalize(i, req, bool(ovf[i])))
+
+    def _finalize(self, i: int, req: ClusterRequest,
+                  overflowed: bool) -> ClusterResult:
+        # The diffusion state is still resident in the lane, so a sweep
+        # workspace that turns out too small is re-swept at doubled caps
+        # (cheap — no diffusion re-run, and each shape compiles once).
+        eng = self.engine
+        n = eng.graph.n
+        cap_n, cap_se = self.cap_n, self.sweep_cap_e
+        max_cap_se = eng.sweep_cap_e << eng.max_bucket
+        p_i = self.state.p[i]
+        while True:
+            sw = sweep_cut_dense(eng.graph, p_i, cap_n, cap_se)
+            if not bool(sw.overflow) or (cap_n >= n and cap_se >= max_cap_se):
+                break
+            cap_n = min(cap_n * 2, n)
+            cap_se = min(cap_se * 2, max_cap_se)
+        overflowed = overflowed or bool(sw.overflow)
+        st = self.state
+        size = int(sw.best_size)
+        members = np.asarray(sw.order)[:size].astype(np.int32)
+        iters = int(np.asarray(st.t if self.method == "pr_nibble" else st.j)[i])
+        return ClusterResult(
+            request=req,
+            conductance=float(sw.best_conductance),
+            size=size,
+            volume=int(sw.best_volume),
+            support=int(sw.nnz),
+            cluster=members,
+            pushes=int(np.asarray(st.pushes)[i]),
+            iterations=iters,
+            bucket=self.bucket,
+            overflow=overflowed,
+        )
+
+
+# -------------------------------------------------------------------- engine
+
+class LocalClusterEngine:
+    """Continuous-batching server for local clustering queries on one graph.
+
+    >>> eng = LocalClusterEngine(graph, batch_slots=8)
+    >>> results = eng.run([ClusterRequest(seed=s) for s in seeds])
+
+    ``run`` preserves request order.  ``submit``/``poll``/``drain`` expose the
+    incremental interface for callers interleaving their own work.
+    """
+
+    def __init__(self, graph: CSRGraph, batch_slots: int = 8,
+                 cap_f: int = 1 << 12, cap_e: int = 1 << 16,
+                 cap_n: int = 1 << 11, sweep_cap_e: int = 1 << 17,
+                 max_cap_e: int = 1 << 26, rounds_per_step: int = 16,
+                 lru_pools: int = 4):
+        self.graph = graph
+        self.batch_slots = batch_slots
+        self.cap_f = cap_f
+        self.cap_e = cap_e
+        self.cap_n = cap_n
+        self.sweep_cap_e = sweep_cap_e
+        self.rounds_per_step = rounds_per_step
+        self.lru_pools = lru_pools
+        self.max_bucket = max(0, (max_cap_e // cap_e).bit_length() - 1)
+        self.pools: "OrderedDict[tuple, _Pool]" = OrderedDict()
+        self.stats: Dict = dict(steps=0, injections=0, promotions=0,
+                                completed=0, pools_created=0,
+                                pools_evicted=0, bucket_shapes=set())
+        self._results: Dict[int, ClusterResult] = {}
+        self._next_idx = 0
+
+    # -- scheduling ----------------------------------------------------------
+
+    def _pool_key(self, req: ClusterRequest, bucket: int) -> tuple:
+        if req.method == "pr_nibble":
+            statics = (req.optimized, req.beta)
+        elif req.method == "hk_pr":
+            statics = (req.N, req.t)
+        else:
+            raise ValueError(f"unknown method: {req.method!r}")
+        return (req.method, statics, bucket)
+
+    def _enqueue(self, idx: int, req: ClusterRequest, bucket: int) -> None:
+        key = self._pool_key(req, bucket)
+        pool = self.pools.get(key)
+        if pool is None:
+            pool = _Pool(self, req.method, key[1], bucket)
+            self.pools[key] = pool
+        self.pools.move_to_end(key)
+        pool.queue.append((idx, req))   # before evict: a pool with work is safe
+        self._evict_idle()
+
+    def _promote(self, idx: int, req: ClusterRequest, bucket: int) -> bool:
+        """Re-enqueue an overflowed request one bucket up.  Returns False if
+        the capacity ladder is exhausted (caller reports overflow)."""
+        if bucket + 1 > self.max_bucket:
+            return False
+        self.stats["promotions"] += 1
+        self._enqueue(idx, req, bucket + 1)
+        return True
+
+    def _complete(self, idx: int, res: ClusterResult) -> None:
+        self._results[idx] = res
+        self.stats["completed"] += 1
+
+    def _evict_idle(self) -> None:
+        while len(self.pools) > self.lru_pools:
+            victim = next((k for k, p in self.pools.items()
+                           if not p.has_work()), None)
+            if victim is None:
+                break
+            del self.pools[victim]
+            self.stats["pools_evicted"] += 1
+
+    # -- public API ----------------------------------------------------------
+
+    def submit(self, req: ClusterRequest) -> int:
+        """Queue a request; returns a ticket usable with :meth:`result`."""
+        self._pool_key(req, 0)  # validate method early
+        idx = self._next_idx
+        self._next_idx += 1
+        self._enqueue(idx, req, 0)
+        return idx
+
+    def poll(self) -> bool:
+        """One scheduler tick: refill, step, and harvest every live pool.
+        Returns True if any pool made progress."""
+        progressed = False
+        for key in list(self.pools):
+            pool = self.pools.get(key)
+            if pool is None or not pool.has_work():
+                continue
+            pool.refill()
+            pool.step()
+            pool.harvest()
+            progressed = True
+        return progressed
+
+    def pending(self) -> int:
+        return sum(1 for p in self.pools.values() if p.has_work())
+
+    def drain(self) -> None:
+        """Run the scheduler until every submitted request has a result."""
+        while self.poll():
+            pass
+        self._evict_idle()
+
+    def result(self, ticket: int) -> ClusterResult:
+        return self._results.pop(ticket)
+
+    def run(self, requests: List[ClusterRequest]) -> List[ClusterResult]:
+        """Submit, drain, and return results in request order."""
+        tickets = [self.submit(r) for r in requests]
+        self.drain()
+        return [self.result(t) for t in tickets]

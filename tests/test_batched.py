@@ -1,0 +1,211 @@
+"""Batched multi-seed engine (core/batched.py) and the clustering service
+(serve/cluster_engine.py) vs the single-seed drivers.
+
+The contract under test: batching is a throughput optimization, never a
+semantics change — per-seed outputs are *identical* to looping the
+single-seed drivers, including through the per-seed overflow retry ladder,
+and the whole batch compiles at most O(log) distinct bucket shapes.
+"""
+import numpy as np
+import pytest
+import jax.numpy as jnp
+
+from repro.core import (pr_nibble, pr_nibble_sparse, hk_pr, sweep_cut_dense,
+                        batched_pr_nibble, batched_hk_pr, batched_cluster,
+                        batched_sweep_cut)
+from repro.serve import ClusterRequest, LocalClusterEngine
+
+# Right-sized workspaces for the small test graphs: one compile per kernel
+# (rand_local-2000 has vol <= 2m = 19082 < 2^15; frontiers fit in 2^11).
+CAPS = dict(cap_f=1 << 11, cap_e=1 << 15)
+SWEEP = dict(cap_n=1 << 10, sweep_cap_e=1 << 15)
+ENGINE_CAPS = dict(cap_f=1 << 11, cap_e=1 << 15, cap_n=1 << 10,
+                   sweep_cap_e=1 << 15)
+
+
+def _mixed_params(local_graph, B, seed=0):
+    rng = np.random.default_rng(seed)
+    deg = np.asarray(local_graph.deg)
+    seeds = rng.choice(np.flatnonzero(deg > 0), size=B).astype(np.int32)
+    eps = rng.choice([1e-5, 1e-6], size=B).astype(np.float32)
+    alpha = rng.choice([0.05, 0.01], size=B).astype(np.float32)
+    return seeds, eps, alpha
+
+
+# ------------------------------------------------- (a) batched == single-seed
+
+def test_batched_pr_nibble_matches_single_seed(local_graph):
+    """Acceptance: ≥32 seeds on rand_local, per-seed p/pushes identical to
+    looping pr_nibble, O(log) distinct compiled bucket shapes."""
+    B = 32
+    seeds, eps, alpha = _mixed_params(local_graph, B)
+    out = batched_pr_nibble(local_graph, seeds, eps, alpha, **CAPS)
+    for i in range(B):
+        ref = pr_nibble(local_graph, int(seeds[i]), float(eps[i]),
+                        float(alpha[i]), **CAPS)
+        np.testing.assert_array_equal(out.p[i], np.asarray(ref.p))
+        np.testing.assert_array_equal(out.r[i], np.asarray(ref.r))
+        assert int(out.pushes[i]) == int(ref.pushes)
+        assert int(out.iterations[i]) == int(ref.iterations)
+    assert not out.overflow.any()
+    # one capacity bucket sufficed -> exactly one compiled shape
+    assert len(set(out.buckets)) == 1
+
+
+def test_batched_pr_nibble_matches_sparse_backend(local_graph):
+    """Cross-check against the SparseVec backend (paper-faithful memory)."""
+    B = 4
+    seeds, eps, alpha = _mixed_params(local_graph, B, seed=1)
+    out = batched_pr_nibble(local_graph, seeds, eps, alpha, **CAPS)
+    for i in range(B):
+        s = pr_nibble_sparse(local_graph, int(seeds[i]), float(eps[i]),
+                             float(alpha[i]))
+        ids = np.asarray(s.p.ids)[: int(s.p.count)]
+        vals = np.asarray(s.p.vals)[: int(s.p.count)]
+        p_sparse = np.zeros(local_graph.n, np.float32)
+        p_sparse[ids] = vals
+        np.testing.assert_allclose(p_sparse, out.p[i], atol=1e-6)
+        assert int(s.pushes) == int(out.pushes[i])
+
+
+def test_batched_hk_pr_matches_single_seed(local_graph):
+    B = 4
+    seeds, _, _ = _mixed_params(local_graph, B, seed=2)
+    eps = np.full(B, 1e-5, np.float32)
+    out = batched_hk_pr(local_graph, seeds, N=10, eps=eps, t=5.0, **CAPS)
+    for i in range(B):
+        ref = hk_pr(local_graph, int(seeds[i]), N=10, eps=1e-5, t=5.0, **CAPS)
+        np.testing.assert_array_equal(out.p[i], np.asarray(ref.p))
+        assert int(out.pushes[i]) == int(ref.pushes)
+
+
+def test_batched_sweep_matches_single(local_graph):
+    B = 4
+    seeds, eps, alpha = _mixed_params(local_graph, B, seed=3)
+    diff = batched_pr_nibble(local_graph, seeds, eps, alpha, **CAPS)
+    sw = batched_sweep_cut(local_graph, jnp.asarray(diff.p), 1 << 10, 1 << 15)
+    for i in range(B):
+        ref = sweep_cut_dense(local_graph, jnp.asarray(diff.p[i]),
+                              1 << 10, 1 << 15)
+        assert float(sw.best_conductance[i]) == float(ref.best_conductance)
+        assert int(sw.best_size[i]) == int(ref.best_size)
+
+
+# ------------------------------------------------- (b) per-seed overflow retry
+
+def test_batched_overflow_retry_converges(local_graph):
+    """Deliberately tiny caps: every seed overflows the first buckets, the
+    retry ladder climbs, and results still equal the single-seed driver
+    (which retries on the same doubling schedule)."""
+    B = 8
+    seeds, eps, alpha = _mixed_params(local_graph, B, seed=4)
+    cap_f0, cap_e0 = 1 << 6, 1 << 8
+    out = batched_pr_nibble(local_graph, seeds, eps, alpha,
+                            cap_f=cap_f0, cap_e=cap_e0)
+    assert not out.overflow.any()
+    assert len(out.buckets) > 1          # retries actually happened
+    # the ladder is the power-of-two schedule: O(log(max_vol/cap_e0)) buckets
+    cap_es = [b[2] for b in out.buckets]
+    assert cap_es == sorted(set(cap_es)), "each bucket dispatched once"
+    assert len(out.buckets) <= 26        # log2(max_cap_e) bound
+    for i in range(B):
+        ref = pr_nibble(local_graph, int(seeds[i]), float(eps[i]),
+                        float(alpha[i]), cap_f=cap_f0, cap_e=cap_e0)
+        np.testing.assert_array_equal(out.p[i], np.asarray(ref.p))
+        assert int(out.pushes[i]) == int(ref.pushes)
+
+
+def test_batched_cluster_matches_per_seed_sweep(sbm_graph):
+    B = 8
+    rng = np.random.default_rng(5)
+    seeds = rng.integers(0, sbm_graph.n, size=B).astype(np.int32)
+    out = batched_cluster(sbm_graph, seeds, 1e-6, 0.05, **CAPS, **SWEEP)
+    for i in range(B):
+        ref = pr_nibble(sbm_graph, int(seeds[i]), 1e-6, 0.05, **CAPS)
+        sw = sweep_cut_dense(sbm_graph, ref.p, min(1 << 10, sbm_graph.n),
+                             1 << 14)
+        assert float(out.best_conductance[i]) == pytest.approx(
+            float(sw.best_conductance), rel=1e-6)
+        assert int(out.best_size[i]) == int(sw.best_size)
+        assert int(out.pushes[i]) == int(ref.pushes)
+
+
+# ------------------------------------------------- (c) LocalClusterEngine
+
+def _engine_reference(g, q):
+    if q.method == "pr_nibble":
+        res = pr_nibble(g, q.seed, q.eps, q.alpha, q.optimized)
+    else:
+        res = hk_pr(g, q.seed, N=q.N, eps=q.eps, t=q.t)
+    return res
+
+
+def test_engine_drains_mixed_queue_with_slot_refill(sbm_graph):
+    """More requests than lanes, heterogeneous (α, ε) and mixed methods:
+    every request completes, in order, matching the single-seed drivers."""
+    rng = np.random.default_rng(6)
+    reqs = []
+    for i in range(10):
+        seed = int(rng.integers(0, sbm_graph.n))
+        if i % 3 == 2:
+            reqs.append(ClusterRequest(seed=seed, method="hk_pr",
+                                       eps=1e-5, N=10, t=5.0))
+        else:
+            reqs.append(ClusterRequest(
+                seed=seed, alpha=float(rng.choice([0.05, 0.01])),
+                eps=float(rng.choice([1e-5, 1e-6]))))
+    eng = LocalClusterEngine(sbm_graph, batch_slots=4, **ENGINE_CAPS)
+    results = eng.run(reqs)
+    assert len(results) == len(reqs)
+    for r, q in zip(results, reqs):
+        assert r.request is q            # order preserved
+        ref = _engine_reference(sbm_graph, q)
+        sw = sweep_cut_dense(sbm_graph, ref.p, min(1 << 10, sbm_graph.n),
+                             1 << 14)
+        assert r.pushes == int(ref.pushes)
+        assert r.conductance == pytest.approx(float(sw.best_conductance),
+                                              rel=1e-6)
+        assert r.size == int(sw.best_size)
+        assert not r.overflow
+    # slot refill: 10 requests through 4 lanes of 2 method pools
+    assert eng.stats["injections"] == 10
+    assert eng.stats["completed"] == 10
+    assert eng.stats["steps"] > 0
+    assert eng.stats["pools_created"] == 2
+
+
+def test_engine_overflow_promotion(sbm_graph):
+    """Tiny capacity buckets: requests climb the ladder and still finish with
+    push counts equal to the bucketed single-seed driver."""
+    reqs = [ClusterRequest(seed=s, alpha=0.05, eps=1e-6) for s in (5, 105, 205)]
+    eng = LocalClusterEngine(sbm_graph, batch_slots=2,
+                             cap_f=1 << 8, cap_e=1 << 10,
+                             cap_n=1 << 8, sweep_cap_e=1 << 10)
+    results = eng.run(reqs)
+    assert eng.stats["promotions"] > 0
+    for r, q in zip(results, reqs):
+        ref = pr_nibble(sbm_graph, q.seed, q.eps, q.alpha,
+                        cap_f=1 << 8, cap_e=1 << 10)
+        assert r.pushes == int(ref.pushes)
+        assert not r.overflow
+    # bucketed recompilation stays logarithmic
+    shapes = eng.stats["bucket_shapes"]
+    assert 0 < len(shapes) <= 26
+
+
+def test_engine_incremental_submit_poll(sbm_graph):
+    """submit/poll/result: the non-blocking interface drains too."""
+    eng = LocalClusterEngine(sbm_graph, batch_slots=4, **ENGINE_CAPS)
+    t1 = eng.submit(ClusterRequest(seed=5, alpha=0.05, eps=1e-5))
+    t2 = eng.submit(ClusterRequest(seed=305, alpha=0.05, eps=1e-5))
+    while eng.poll():
+        pass
+    r1, r2 = eng.result(t1), eng.result(t2)
+    assert r1.request.seed == 5 and r2.request.seed == 305
+    assert r1.size > 0 and r2.size > 0
+
+
+def test_engine_rejects_unknown_method(sbm_graph):
+    eng = LocalClusterEngine(sbm_graph)
+    with pytest.raises(ValueError, match="unknown method"):
+        eng.submit(ClusterRequest(seed=1, method="nibble"))

@@ -1,7 +1,11 @@
 """Property tests for the frontier machinery + sort-merge sparse sets
 (hypothesis) — the paper's §3 primitives."""
 import numpy as np
+import pytest
 import jax.numpy as jnp
+
+pytest.importorskip("hypothesis", reason="property suite needs hypothesis "
+                    "(pip install -r requirements-dev.txt)")
 from hypothesis import given, settings, strategies as st
 
 from repro.core.frontier import Frontier, expand, pack_unique, singleton

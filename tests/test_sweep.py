@@ -2,7 +2,12 @@
 import numpy as np
 import pytest
 import jax.numpy as jnp
-from hypothesis import given, settings, strategies as st
+
+try:  # only the property test below needs hypothesis
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    HAVE_HYPOTHESIS = False
 
 from repro.core import pr_nibble, sweep_cut, sweep_cut_dense, seq
 from repro.graphs import sbm, rand_local
@@ -51,17 +56,23 @@ def test_sweep_conductance_definition(sbm_graph):
         assert float(sw.conductance[j - 1]) == pytest.approx(cond, rel=1e-5)
 
 
-@settings(max_examples=15, deadline=None)
-@given(st.integers(min_value=0, max_value=2**31 - 1))
-def test_sweep_random_vectors_match_sequential(seed):
-    """Property: for arbitrary sparse vectors on a fixed graph, the parallel
-    sweep returns the sequential sweep's conductance."""
-    rng = np.random.default_rng(seed)
-    graph = rand_local(500, degree=4, seed=11)
-    nnz = rng.integers(2, 60)
-    ids = rng.choice(500, size=nnz, replace=False)
-    p = np.zeros(500, dtype=np.float32)
-    p[ids] = rng.random(nnz).astype(np.float32) + 1e-3
-    sw, ref = _run_both(graph, p)
-    assert float(sw.best_conductance) == pytest.approx(
-        ref["best_conductance"], rel=1e-4)
+if HAVE_HYPOTHESIS:
+    @settings(max_examples=15, deadline=None)
+    @given(st.integers(min_value=0, max_value=2**31 - 1))
+    def test_sweep_random_vectors_match_sequential(seed):
+        """Property: for arbitrary sparse vectors on a fixed graph, the
+        parallel sweep returns the sequential sweep's conductance."""
+        rng = np.random.default_rng(seed)
+        graph = rand_local(500, degree=4, seed=11)
+        nnz = rng.integers(2, 60)
+        ids = rng.choice(500, size=nnz, replace=False)
+        p = np.zeros(500, dtype=np.float32)
+        p[ids] = rng.random(nnz).astype(np.float32) + 1e-3
+        sw, ref = _run_both(graph, p)
+        assert float(sw.best_conductance) == pytest.approx(
+            ref["best_conductance"], rel=1e-4)
+else:
+    @pytest.mark.skip(reason="hypothesis not installed "
+                      "(pip install -r requirements-dev.txt)")
+    def test_sweep_random_vectors_match_sequential():
+        pass
