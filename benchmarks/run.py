@@ -3,9 +3,14 @@
 Prints ``name,us_per_call,derived`` CSV.  --fast trims graph sizes (default);
 --full runs the complete suite; --smoke runs each benchmark's smallest
 config (the CI gate — must finish in a couple of minutes on one CPU core).
+
+Every requested suite runs even if an earlier one fails; failures are
+reported as ``<suite>/ERROR`` rows and the process exits nonzero at the end
+(the CI gate must fail loudly, not skip silently).
 """
 import argparse
 import sys
+import traceback
 
 
 def main() -> None:
@@ -15,10 +20,11 @@ def main() -> None:
                     help="smallest config per benchmark; used by CI")
     ap.add_argument("--only", default=None,
                     help="comma list: table1,table3,fig2,fig6,fig9,fig10,"
-                         "kernels,batched")
+                         "kernels,batched,sparse_batched")
     args = ap.parse_args()
     from . import (table1_pushes, table3_runtimes, fig2_opt_rule, fig6_params,
-                   fig9_sweep_scaling, fig10_ncp, kernels_bench, batched_bench)
+                   fig9_sweep_scaling, fig10_ncp, kernels_bench, batched_bench,
+                   sparse_batched_bench)
     smoke = args.smoke
     suites = {
         "table1": lambda: table1_pushes.run(smoke=smoke),
@@ -29,16 +35,22 @@ def main() -> None:
         "fig10": lambda: fig10_ncp.run(smoke=smoke),
         "kernels": lambda: kernels_bench.run(smoke=smoke),
         "batched": lambda: batched_bench.run(smoke=smoke),
+        "sparse_batched": lambda: sparse_batched_bench.run(smoke=smoke),
     }
     only = args.only.split(",") if args.only else list(suites)
     print("name,us_per_call,derived")
+    failures = []
     for k in only:
         try:
             suites[k]()
-        except Exception as e:  # keep the harness going; report the failure
+        except Exception as e:
             print(f"{k}/ERROR,0,{type(e).__name__}:{str(e)[:120]}",
                   file=sys.stdout, flush=True)
-            raise
+            traceback.print_exc(file=sys.stderr)
+            failures.append(k)
+    if failures:
+        print(f"FAILED suites: {','.join(failures)}", file=sys.stderr)
+        sys.exit(1)
 
 
 if __name__ == '__main__':

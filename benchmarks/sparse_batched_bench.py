@@ -1,0 +1,75 @@
+"""Batched sparse backend benchmark: pushes/sec and peak live values vs dense.
+
+The sparse backend's claim (ISSUE 2 acceptance) is *memory-bounded many-seed
+serving*: a dense batched lane persists 2·n f32 state values (p, r) however
+small the cluster, while a sparse lane persists 2·cap_v values + 2·cap_v ids
+— bounded by the lane's frontier/value capacity K, independent of n.  This
+bench runs the same seed batch through both paths and reports:
+
+  * pushes/sec for each path (identical push counts — the work is the same,
+    only the state representation differs),
+  * peak live diffusion values per lane (dense: 2n; sparse: 2·K of the
+    largest dispatched bucket), and their ratio.
+
+It *asserts* the memory-bound claim — every lane's final support fits its
+K, and the sparse per-lane live values are what the capacity accounting
+(:func:`repro.core.batched_sparse.sparse_lane_footprint`) predicts — and
+that both paths computed the same diffusion (densified sparse p == dense p),
+so the reported rates compare equal work.  Any violation raises, which
+``benchmarks/run.py`` turns into a nonzero exit.
+"""
+import numpy as np
+
+from repro.core import (batched_pr_nibble, batched_pr_nibble_sparse,
+                        sparse_lane_footprint, sparse_rows_to_dense)
+from .common import get_graph, emit, timeit
+
+
+def run(smoke: bool = False):
+    name = "sbm-planted" if smoke else "randLocal-50k"
+    B = 8 if smoke else 32
+    eps, alpha = 1e-6, 0.01
+    dense_caps = (dict(cap_f=1 << 10, cap_e=1 << 14) if smoke
+                  else dict(cap_f=1 << 12, cap_e=1 << 16))
+    sparse_caps = dict(dense_caps, cap_v=1 << 10 if smoke else 1 << 12)
+    prime = not smoke
+    g = get_graph(name)
+    rng = np.random.default_rng(0)
+    seeds = rng.choice(np.flatnonzero(np.asarray(g.deg) > 0),
+                       size=B).astype(np.int32)
+
+    us_d, out_d = timeit(batched_pr_nibble, g, seeds, eps, alpha,
+                         repeats=1, prime=prime, **dense_caps)
+    us_s, out_s = timeit(batched_pr_nibble_sparse, g, seeds, eps, alpha,
+                         repeats=1, prime=prime, **sparse_caps)
+
+    pushes = int(out_d.pushes.sum())
+    assert int(out_s.pushes.sum()) == pushes, \
+        "sparse backend did different work than dense"
+    np.testing.assert_allclose(
+        sparse_rows_to_dense(out_s.p_ids, out_s.p_vals, out_s.p_count, g.n),
+        out_d.p, atol=1e-6, err_msg="sparse and dense diffusions disagree")
+
+    # peak live diffusion values per lane: dense persists p,r = 2n floats;
+    # sparse persists 2·K floats (+ 2·K ids) of the largest bucket it used
+    cap_v_max = max(b[3] for b in out_s.buckets)
+    assert (out_s.p_count <= cap_v_max).all() and \
+           (out_s.r_count <= cap_v_max).all(), \
+        "lane support exceeded its value capacity K"
+    live_sparse = 2 * cap_v_max
+    assert live_sparse == sparse_lane_footprint(
+        1, 1, cap_v_max)["state"] // 2, "footprint accounting drifted"
+    live_dense = 2 * g.n
+
+    emit(f"sparse_batched/{name}/dense_B={B}", us_d,
+         f"pushes_per_sec={pushes / max(us_d * 1e-6, 1e-12):.0f};"
+         f"live_vals_per_lane={live_dense}")
+    emit(f"sparse_batched/{name}/sparse_B={B}", us_s,
+         f"pushes_per_sec={pushes / max(us_s * 1e-6, 1e-12):.0f};"
+         f"live_vals_per_lane={live_sparse};K={cap_v_max};"
+         f"dense_over_sparse_mem={live_dense / live_sparse:.1f}x;"
+         f"buckets={len(out_s.buckets)};asserts=ok")
+
+
+if __name__ == "__main__":
+    run()

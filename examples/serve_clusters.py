@@ -28,6 +28,10 @@ def main():
     ap.add_argument("--batch-slots", type=int, default=16)
     ap.add_argument("--eps", type=float, default=1e-4,
                     help="base truncation threshold (smaller = less local)")
+    ap.add_argument("--backend", default="auto",
+                    choices=["auto", "dense", "sparse"],
+                    help="engine lane type; sparse = O(cap_v) state per lane "
+                         "(HK-PR requests always serve dense)")
     args = ap.parse_args()
 
     print(f"building randLocal graph (n={args.n}) ...")
@@ -69,7 +73,8 @@ def main():
           f"({len(out.buckets)} capacity bucket(s), PR-Nibble subset)")
 
     # 3. the serving engine: mixed methods, slot refill, sweep included
-    eng = LocalClusterEngine(g, batch_slots=args.batch_slots)
+    eng = LocalClusterEngine(g, batch_slots=args.batch_slots,
+                             backend=args.backend)
     t0 = time.perf_counter()
     results = eng.run(reqs)
     dt_eng = time.perf_counter() - t0

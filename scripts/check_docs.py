@@ -1,0 +1,110 @@
+#!/usr/bin/env python
+"""CI gate: docs must not rot.
+
+Checks, over ``docs/*.md`` and ``README.md``:
+
+  * every relative markdown link ``[text](target)`` resolves to an existing
+    file (http/mailto links are skipped), and its ``#fragment`` — if any —
+    matches a heading in the target file (GitHub slug rules, simplified);
+  * every backtick code reference that looks like a repo path
+    (``src/repro/core/batched.py``, ``benchmarks/run.py``, ``docs/x.md`` …)
+    points at an existing file, trying repo root, the doc's own directory,
+    and ``src/repro/`` as bases;
+  * every backtick dotted reference starting with ``repro.`` resolves to a
+    module or an attribute exported by one (so renames break the build,
+    not the reader).
+
+Exit 0 when clean; exit 1 listing every broken reference.
+"""
+from __future__ import annotations
+
+import re
+import sys
+from pathlib import Path
+
+REPO = Path(__file__).resolve().parent.parent
+DOC_FILES = sorted((REPO / "docs").glob("*.md")) + [REPO / "README.md"]
+
+LINK_RE = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
+PATH_RE = re.compile(
+    r"`([A-Za-z0-9_./-]+\.(?:py|md|yml|yaml|toml|txt|csv))`")
+DOTTED_RE = re.compile(r"`(repro(?:\.[A-Za-z_][A-Za-z0-9_]*)+)`")
+
+
+def slugify(heading: str) -> str:
+    """GitHub-style anchor slug (simplified: enough for our headings)."""
+    h = re.sub(r"[`*_]", "", heading.strip().lower())
+    h = re.sub(r"[^\w\- ]", "", h)
+    return h.replace(" ", "-")
+
+
+def headings(md: Path) -> set:
+    out = set()
+    for line in md.read_text().splitlines():
+        m = re.match(r"#+\s+(.*)", line)
+        if m:
+            out.add(slugify(m.group(1)))
+    return out
+
+
+def check_link(doc: Path, target: str, errors: list) -> None:
+    if target.startswith(("http://", "https://", "mailto:")):
+        return
+    path, _, frag = target.partition("#")
+    dest = doc if not path else (doc.parent / path).resolve()
+    if not dest.exists():
+        errors.append(f"{doc.relative_to(REPO)}: broken link -> {target}")
+        return
+    if frag and dest.suffix == ".md" and slugify(frag) not in headings(dest):
+        errors.append(f"{doc.relative_to(REPO)}: missing anchor -> {target}")
+
+
+def check_path_ref(doc: Path, ref: str, errors: list) -> None:
+    if "/" not in ref:        # bare filenames ("run.py") aren't repo claims
+        return
+    for base in (REPO, doc.parent, REPO / "src" / "repro"):
+        if (base / ref).exists():
+            return
+    errors.append(f"{doc.relative_to(REPO)}: missing code ref -> {ref}")
+
+
+def check_dotted_ref(doc: Path, ref: str, errors: list) -> None:
+    parts = ref.split(".")
+    # longest prefix that is a module file/package under src/
+    for cut in range(len(parts), 0, -1):
+        mod = REPO / "src" / Path(*parts[:cut])
+        if mod.with_suffix(".py").exists() or (mod / "__init__.py").exists():
+            src = (mod.with_suffix(".py") if mod.with_suffix(".py").exists()
+                   else mod / "__init__.py")
+            rest = parts[cut:]
+            if not rest or re.search(
+                    r"\b{}\b".format(re.escape(rest[0])), src.read_text()):
+                return
+            break
+    errors.append(f"{doc.relative_to(REPO)}: unresolvable symbol -> {ref}")
+
+
+def main() -> int:
+    errors: list = []
+    for doc in DOC_FILES:
+        if not doc.exists():
+            errors.append(f"missing doc file: {doc.relative_to(REPO)}")
+            continue
+        text = doc.read_text()
+        for m in LINK_RE.finditer(text):
+            check_link(doc, m.group(1), errors)
+        for m in PATH_RE.finditer(text):
+            check_path_ref(doc, m.group(1), errors)
+        for m in DOTTED_RE.finditer(text):
+            check_dotted_ref(doc, m.group(1), errors)
+    if errors:
+        print("check_docs: FAILED")
+        for e in errors:
+            print("  " + e)
+        return 1
+    print(f"check_docs: OK ({len(DOC_FILES)} files)")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

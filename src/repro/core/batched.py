@@ -21,6 +21,27 @@ per-seed results stay bit-identical to the single-seed path).  The whole
 batch therefore compiles at most O(log) distinct bucket shapes, all reused
 from the jit cache across calls — the property `LocalClusterEngine`
 (serve/cluster_engine.py) builds its compiled-shape LRU on.
+
+Capacity-ladder semantics (shared with core/batched_sparse.py):
+
+  * Every jitted kernel takes *static* capacities; one (batch, caps) tuple
+    is one compiled shape ("bucket").  Bucket b has caps ``base << b``.
+  * Ladder step (``_CapLadder.advance``): ``cap_f`` and the sparse value
+    capacity ``cap_v`` double but clamp at ``n + 1`` (a frontier/support can
+    never exceed every vertex + sentinel); ``cap_e`` doubles unclamped until
+    ``max_cap_e``; the sweep caps ``cap_n``/``sweep_cap_e`` clamp at
+    ``n`` / nothing.  This is verbatim the single-seed drivers' schedule —
+    the bit-identity guarantee depends on dispatching the *same* static
+    shapes the single-seed retry loop would.
+  * Retry contract (``_bucketed_retry``): after each dispatch, lanes whose
+    overflow flag is set are repacked (padded to a power of two by cycling
+    lanes) and re-dispatched one bucket up; lanes that finish are written
+    to the output buffers exactly once.  When the ladder is exhausted
+    (``cap_e ≥ max_cap_e``) overflowed lanes are written as-is with their
+    flag set, matching the single-seed drivers.
+  * Recompile boundary: a fresh (batch_pow2, caps) pair.  A B-seed call
+    therefore compiles ≤ O(log B · log(max_cap_e/cap_e)) shapes, all shared
+    process-wide through the jit cache.
 """
 from __future__ import annotations
 
@@ -53,7 +74,9 @@ def batched_pr_nibble_fixedcap(graph: CSRGraph, seeds, eps, alpha,
                                max_iters: int = MAX_ITERS, beta: float = 1.0):
     """vmap of :func:`pr_nibble_fixedcap`: seeds[B] with per-seed (eps, alpha).
 
-    Returns a :class:`PRNibbleResult` whose leaves carry a leading [B] axis.
+    Shapes: ``seeds`` int32[B], ``eps``/``alpha`` f32[B]; returns a
+    :class:`PRNibbleResult` whose leaves carry a leading [B] axis
+    (``p``/``r`` f32[B, n], counters int32[B], ``overflow`` bool[B]).
     """
     def one(s, e, a):
         return pr_nibble_fixedcap(graph, s, e, a, optimized, cap_f, cap_e,
@@ -64,7 +87,10 @@ def batched_pr_nibble_fixedcap(graph: CSRGraph, seeds, eps, alpha,
 @functools.partial(jax.jit, static_argnums=(2, 4, 5, 6))
 def batched_hk_pr_fixedcap(graph: CSRGraph, seeds, N: int, eps, t: float,
                            cap_f: int, cap_e: int):
-    """vmap of :func:`hk_pr_fixedcap`: seeds[B] with per-seed eps (N, t static)."""
+    """vmap of :func:`hk_pr_fixedcap`: seeds[B] with per-seed eps (N, t static).
+
+    Shapes: ``seeds`` int32[B], ``eps`` f32[B]; result leaves lead with [B].
+    """
     def one(s, e):
         return hk_pr_fixedcap(graph, s, N, e, t, cap_f, cap_e)
     return jax.vmap(one)(seeds, eps)
@@ -72,7 +98,13 @@ def batched_hk_pr_fixedcap(graph: CSRGraph, seeds, N: int, eps, t: float,
 
 @functools.partial(jax.jit, static_argnums=(2, 3))
 def batched_sweep_cut(graph: CSRGraph, p, cap_n: int, cap_e: int):
-    """vmap of :func:`sweep_cut_dense` over p[B, n] diffusion vectors."""
+    """vmap of :func:`sweep_cut_dense` over p[B, n] diffusion vectors.
+
+    ``p`` is f32[B, n]; returns a :class:`SweepResult` with leading [B] axis
+    (curves f32[B, min(cap_n, n)], scalars → [B]).  See
+    :func:`repro.core.batched_sparse.batched_sparse_sweep_cut` for the
+    O(cap_n + cap_e)-per-lane variant that never touches f32[n].
+    """
     return jax.vmap(lambda q: sweep_cut_dense(graph, q, cap_n, cap_e))(p)
 
 
@@ -192,11 +224,20 @@ def _bucketed_retry(B, dispatch, advance, exhausted, outputs, ovf_out):
 
 
 class _CapLadder:
-    """The single-seed drivers' doubling schedule, shared by retries."""
+    """The single-seed drivers' doubling schedule, shared by retries.
 
-    def __init__(self, n, cap_f, cap_e, max_cap_e, cap_n=None, sweep_cap_e=None):
+    Generalized over every per-lane capacity, not just the vertex-count-like
+    ones: ``cap_f`` (frontier slots), ``cap_e`` (edge workspace), and
+    optionally ``cap_v`` (SparseVec value slots, the sparse backend's K),
+    ``cap_n``/``sweep_cap_e`` (sweep grid / sweep edge workspace).  ``None``
+    capacities are absent from the schedule.
+    """
+
+    def __init__(self, n, cap_f, cap_e, max_cap_e, cap_n=None, sweep_cap_e=None,
+                 cap_v=None):
         self.n, self.cap_f, self.cap_e, self.max_cap_e = n, cap_f, cap_e, max_cap_e
         self.cap_n, self.sweep_cap_e = cap_n, sweep_cap_e
+        self.cap_v = cap_v
 
     def exhausted(self):
         return self.cap_e >= self.max_cap_e
@@ -204,6 +245,8 @@ class _CapLadder:
     def advance(self):
         self.cap_f = min(self.cap_f * 2, self.n + 1)
         self.cap_e = self.cap_e * 2
+        if self.cap_v is not None:
+            self.cap_v = min(self.cap_v * 2, self.n + 1)
         if self.cap_n is not None:
             self.cap_n = min(self.cap_n * 2, self.n)
         if self.sweep_cap_e is not None:
@@ -217,7 +260,13 @@ def batched_pr_nibble(graph: CSRGraph, seeds, eps=1e-7, alpha=0.01,
                       max_iters: int = MAX_ITERS) -> BatchedDiffusionResult:
     """Batched bucketed driver: one dispatch per capacity bucket, per-seed
     overflow retry.  Per-seed output is identical to looping
-    :func:`repro.core.pr_nibble.pr_nibble` (same capacity schedule)."""
+    :func:`repro.core.pr_nibble.pr_nibble` (same capacity schedule).
+
+    ``seeds`` is int-like[B] (scalars broadcast); ``eps``/``alpha`` broadcast
+    to f32[B].  Returns host-side numpy: ``p``/``r`` f32[B, n], counters
+    int32[B], ``overflow`` bool[B] (True only if max_cap_e was exhausted),
+    and the dispatched ``buckets`` tuple for compile-shape accounting.
+    """
     seeds, B, eps, alpha = _prep_batch(seeds, eps, alpha)
     n = graph.n
     out = dict(p=np.zeros((B, n), np.float32), r=np.zeros((B, n), np.float32),

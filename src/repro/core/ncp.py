@@ -12,6 +12,10 @@ overflowed the capacity bucket are retried at the next power-of-two bucket
 instead of being dropped — every seed contributes to the profile.  Batches
 are sharded over the `data` mesh axis by the distributed launcher; this is
 the multi-pod embodiment of the paper's interactive-analytics workload.
+
+``backend="sparse"`` swaps in the memory-bounded fused kernel from
+:mod:`repro.core.batched_sparse` — same profile semantics, per-lane state
+O(cap_v) instead of O(n).
 """
 from __future__ import annotations
 
@@ -22,6 +26,7 @@ import jax.numpy as jnp
 
 from repro.graphs.csr import CSRGraph
 from .batched import batched_cluster, batched_cluster_fixedcap
+from .batched_sparse import batched_cluster_sparse
 
 __all__ = ["NCPResult", "ncp_batch", "ncp"]
 
@@ -50,9 +55,18 @@ def ncp(graph: CSRGraph, num_seeds: int = 256,
         alphas=(0.1, 0.01), epss=(1e-5, 1e-6, 1e-7),
         batch: int = 64, seed: int = 0,
         cap_f: int = 1 << 12, cap_e: int = 1 << 16,
-        cap_n: int = 1 << 12, sweep_cap_e: int = 1 << 18) -> NCPResult:
+        cap_n: int = 1 << 12, sweep_cap_e: int = 1 << 18,
+        backend: str = "dense", cap_v: int = 1 << 12) -> NCPResult:
     """Host driver: grid of (seed, α, ε) runs through the batched engine
-    (per-seed overflow retry included)."""
+    (per-seed overflow retry included).
+
+    ``backend="sparse"`` routes every batch through the fused sparse path
+    (:func:`repro.core.batched_sparse.batched_cluster_sparse`): per-lane
+    memory O(cap_v) instead of O(n), sweep curves on the
+    ``min(cap_n, cap_v)`` grid — the profile a billion-vertex NCP must use.
+    """
+    if backend not in ("dense", "sparse"):
+        raise ValueError(f"unknown backend: {backend!r}")
     rng = np.random.default_rng(seed)
     deg = np.asarray(graph.deg)
     nonzero = np.flatnonzero(deg > 0)
@@ -60,6 +74,8 @@ def ncp(graph: CSRGraph, num_seeds: int = 256,
     grid = [(e, a) for a in alphas for e in epss]
 
     cap_n = min(cap_n, graph.n)   # sweep clamps its prefix cap to n
+    if backend == "sparse":
+        cap_n = min(cap_n, cap_v)  # sparse curves live on the cap_v grid
     best = np.full((cap_n,), np.inf, dtype=np.float32)
     runs = 0
     for (eps, alpha) in grid:
@@ -67,11 +83,17 @@ def ncp(graph: CSRGraph, num_seeds: int = 256,
             sb = seeds[lo: lo + batch]
             if sb.shape[0] < batch:  # pad final batch
                 sb = np.concatenate([sb, np.repeat(sb[:1], batch - sb.shape[0])])
-            out = batched_cluster(graph, sb, eps, alpha, cap_f=cap_f,
-                                  cap_e=cap_e, cap_n=cap_n,
-                                  sweep_cap_e=sweep_cap_e)
+            if backend == "sparse":
+                out = batched_cluster_sparse(graph, sb, eps, alpha,
+                                             cap_f=cap_f, cap_e=cap_e,
+                                             cap_v=cap_v,
+                                             sweep_cap_e=sweep_cap_e)
+            else:
+                out = batched_cluster(graph, sb, eps, alpha, cap_f=cap_f,
+                                      cap_e=cap_e, cap_n=cap_n,
+                                      sweep_cap_e=sweep_cap_e)
             ok = ~out.overflow
-            curves = np.where(ok[:, None], out.conductance, np.inf)
+            curves = np.where(ok[:, None], out.conductance[:, :cap_n], np.inf)
             best = np.minimum(best, curves.min(axis=0))
             runs += int(ok.sum())
     sizes = np.arange(1, cap_n + 1)

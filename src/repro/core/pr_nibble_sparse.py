@@ -6,6 +6,21 @@ memory is O(cap_v) = O(|support|), independent of n — the claim that makes
 the algorithms "local" in the paper.  Used to cross-check the dense backend
 and to serve billion-vertex graphs where even one dense f32[n] per query is
 wasteful.
+
+Like :mod:`repro.core.pr_nibble`, the loop is decomposed into
+``init / round / alive`` so the batched driver (core/batched_sparse.py) and
+the serving engine (serve/cluster_engine.py) can step the *same* round
+function the single-seed driver runs — that sharing is what makes their
+per-seed bit-identity guarantee structural rather than aspirational.
+
+Shape/dtype contracts (``n`` = graph.n; sentinel id is ``n``):
+  * state ``p``, ``r`` — :class:`SparseVec` of capacity ``cap_v``:
+    ``ids`` int32[cap_v] sorted/sentinel-padded, ``vals`` f32[cap_v],
+    ``count`` int32 scalar, ``overflow`` bool scalar.
+  * ``frontier`` — :class:`Frontier` of capacity ``cap_f``.
+  * results carry int32 scalar ``iterations``/``pushes`` and a bool
+    ``overflow`` that ORs every capacity violation (frontier, edge
+    workspace, or SparseVec) seen on the way.
 """
 from __future__ import annotations
 
@@ -20,7 +35,9 @@ from .frontier import Frontier, expand, pack_unique, singleton
 from .sparsevec import (SparseVec, sv_empty, sv_from_pairs, sv_lookup,
                         sv_merge_add, sv_update_existing)
 
-__all__ = ["PRNibbleSparseResult", "pr_nibble_sparse"]
+__all__ = ["PRNibbleSparseResult", "PRNibbleSparseState", "pr_nibble_sparse",
+           "pr_nibble_sparse_fixedcap", "pr_nibble_sparse_init",
+           "pr_nibble_sparse_round", "pr_nibble_sparse_alive"]
 
 
 class PRNibbleSparseResult(NamedTuple):
@@ -31,7 +48,9 @@ class PRNibbleSparseResult(NamedTuple):
     overflow: jnp.ndarray
 
 
-class _State(NamedTuple):
+class PRNibbleSparseState(NamedTuple):
+    """Loop carry of one sparse PR-Nibble run — exposed so the batched and
+    streaming drivers can step the same rounds (cf. ``PRNibbleState``)."""
     p: SparseVec
     r: SparseVec
     frontier: Frontier
@@ -40,58 +59,81 @@ class _State(NamedTuple):
     overflow: jnp.ndarray
 
 
+def pr_nibble_sparse_init(x, n: int, cap_f: int, cap_v: int) -> PRNibbleSparseState:
+    """Initial state: unit residual on the seed, seed frontier, empty p.
+
+    ``x`` is an int32 seed id (scalar or 0-d array); the state's SparseVecs
+    have capacity ``cap_v`` and the frontier capacity ``cap_f``.
+    """
+    r0 = sv_from_pairs(jnp.full((1,), jnp.asarray(x, jnp.int32)),
+                       jnp.ones((1,), jnp.float32),
+                       jnp.ones((1,), bool), cap_v, n)
+    return PRNibbleSparseState(p=sv_empty(cap_v, n), r=r0,
+                               frontier=singleton(x, n, cap_f),
+                               t=jnp.asarray(0, jnp.int32),
+                               pushes=jnp.asarray(0, jnp.int32),
+                               overflow=jnp.asarray(False))
+
+
+def pr_nibble_sparse_alive(s: PRNibbleSparseState,
+                           max_iters: int = 10_000) -> jnp.ndarray:
+    """True while the run still has above-threshold residual to push."""
+    return (s.frontier.count > 0) & (~s.overflow) & (s.t < max_iters)
+
+
+def pr_nibble_sparse_round(graph: CSRGraph, s: PRNibbleSparseState, eps, alpha,
+                           optimized: bool, cap_e: int) -> PRNibbleSparseState:
+    """One synchronous push round over the sparse state (Figures 3–4)."""
+    n = graph.n
+    deg = graph.deg
+    f = s.frontier
+    fvalid = f.valid()
+    fids = jnp.where(fvalid, f.ids, n)
+    safe = jnp.minimum(fids, n - 1)
+    rf = jnp.where(fvalid, sv_lookup(s.r, fids, n), 0.0)
+    dv = jnp.maximum(deg[safe], 1)
+
+    if optimized:
+        p_gain = (2.0 * alpha / (1.0 + alpha)) * rf
+        r_self = jnp.zeros_like(rf)
+        share = ((1.0 - alpha) / (1.0 + alpha)) * rf / dv
+    else:
+        p_gain = alpha * rf
+        r_self = (1.0 - alpha) * rf / 2.0
+        share = (1.0 - alpha) * rf / (2.0 * dv)
+
+    p_new = sv_merge_add(s.p, fids, p_gain, fvalid, n)
+    r_new = sv_update_existing(s.r, fids, r_self, fvalid)
+    eb = expand(graph, f, cap_e)
+    r_new = sv_merge_add(r_new, eb.dst, share[eb.slot], eb.valid, n)
+
+    cands = jnp.concatenate([fids, eb.dst])
+    cvalid = jnp.concatenate([fvalid, eb.valid])
+    csafe = jnp.minimum(cands, n - 1)
+    r_cand = sv_lookup(r_new, cands, n)
+    keep = cvalid & (deg[csafe] > 0) & (r_cand >= deg[csafe] * eps)
+    nf = pack_unique(cands, keep, n, f.cap)
+
+    return PRNibbleSparseState(p=p_new, r=r_new, frontier=nf, t=s.t + 1,
+                               pushes=s.pushes + f.count,
+                               overflow=(s.overflow | nf.overflow |
+                                         eb.overflow | p_new.overflow |
+                                         r_new.overflow))
+
+
 @functools.partial(jax.jit, static_argnums=(4, 5, 6, 7, 8))
 def pr_nibble_sparse_fixedcap(graph: CSRGraph, x, eps, alpha,
                               optimized: bool, cap_f: int, cap_e: int,
                               cap_v: int, max_iters: int = 10_000
                               ) -> PRNibbleSparseResult:
-    n = graph.n
-    deg = graph.deg
+    def cond(s: PRNibbleSparseState):
+        return pr_nibble_sparse_alive(s, max_iters)
 
-    def cond(s: _State):
-        return (s.frontier.count > 0) & (~s.overflow) & (s.t < max_iters)
+    def body(s: PRNibbleSparseState) -> PRNibbleSparseState:
+        return pr_nibble_sparse_round(graph, s, eps, alpha, optimized, cap_e)
 
-    def body(s: _State) -> _State:
-        f = s.frontier
-        fvalid = f.valid()
-        fids = jnp.where(fvalid, f.ids, n)
-        safe = jnp.minimum(fids, n - 1)
-        rf = jnp.where(fvalid, sv_lookup(s.r, fids, n), 0.0)
-        dv = jnp.maximum(deg[safe], 1)
-
-        if optimized:
-            p_gain = (2.0 * alpha / (1.0 + alpha)) * rf
-            r_self = jnp.zeros_like(rf)
-            share = ((1.0 - alpha) / (1.0 + alpha)) * rf / dv
-        else:
-            p_gain = alpha * rf
-            r_self = (1.0 - alpha) * rf / 2.0
-            share = (1.0 - alpha) * rf / (2.0 * dv)
-
-        p_new = sv_merge_add(s.p, fids, p_gain, fvalid, n)
-        r_new = sv_update_existing(s.r, fids, r_self, fvalid)
-        eb = expand(graph, f, cap_e)
-        r_new = sv_merge_add(r_new, eb.dst, share[eb.slot], eb.valid, n)
-
-        cands = jnp.concatenate([fids, eb.dst])
-        cvalid = jnp.concatenate([fvalid, eb.valid])
-        csafe = jnp.minimum(cands, n - 1)
-        r_cand = sv_lookup(r_new, cands, n)
-        keep = cvalid & (deg[csafe] > 0) & (r_cand >= deg[csafe] * eps)
-        nf = pack_unique(cands, keep, n, cap_f)
-
-        return _State(p=p_new, r=r_new, frontier=nf, t=s.t + 1,
-                      pushes=s.pushes + f.count,
-                      overflow=(s.overflow | nf.overflow | eb.overflow |
-                                p_new.overflow | r_new.overflow))
-
-    r0 = sv_from_pairs(jnp.full((1,), jnp.asarray(x, jnp.int32)),
-                       jnp.ones((1,), jnp.float32),
-                       jnp.ones((1,), bool), cap_v, n)
-    s0 = _State(p=sv_empty(cap_v, n), r=r0, frontier=singleton(x, n, cap_f),
-                t=jnp.asarray(0, jnp.int32), pushes=jnp.asarray(0, jnp.int32),
-                overflow=jnp.asarray(False))
-    s = jax.lax.while_loop(cond, body, s0)
+    s = jax.lax.while_loop(cond, body,
+                           pr_nibble_sparse_init(x, graph.n, cap_f, cap_v))
     return PRNibbleSparseResult(p=s.p, r=s.r, iterations=s.t, pushes=s.pushes,
                                 overflow=s.overflow)
 
@@ -100,6 +142,13 @@ def pr_nibble_sparse(graph: CSRGraph, x, eps: float = 1e-7, alpha: float = 0.01,
                      optimized: bool = True, cap_f: int = 1 << 10,
                      cap_e: int = 1 << 14, cap_v: int = 1 << 12,
                      max_cap_e: int = 1 << 26) -> PRNibbleSparseResult:
+    """Bucketed driver: retry with doubled capacities on overflow.
+
+    The doubling schedule (cap_f, cap_v clamped to n+1; cap_e unclamped up to
+    ``max_cap_e``) is shared verbatim by ``batched_pr_nibble_sparse`` and the
+    serving engine's bucket-promotion ladder, so all three paths dispatch the
+    same static shapes and return bit-identical per-seed results.
+    """
     while True:
         out = pr_nibble_sparse_fixedcap(graph, x, eps, alpha, optimized,
                                         cap_f, cap_e, cap_v)

@@ -10,13 +10,34 @@ frontier capacities are static shapes and refill is a dynamic-index
 injection into the batched state.
 
 Requests with heterogeneous (α, ε) share one lane pool; only genuinely
-trace-level choices (method, update rule, β, HK's (N, t)) and the capacity
-*bucket* select a pool.  Lanes that overflow their bucket's ``(cap_f,
-cap_e)`` workspace are re-enqueued one power-of-two bucket up (the bucketed
-recompilation contract of core/frontier.py), so a request stream compiles at
-most O(log) distinct shapes per method.  Idle pools beyond ``lru_pools`` are
-evicted least-recently-used to bound device memory; XLA's jit cache keeps
-the compiled kernels, so re-creating an evicted pool is cheap.
+trace-level choices (method, update rule, β, HK's (N, t)), the lane
+*backend* (dense vs sparse state), and the capacity *bucket* select a pool.
+Lanes that overflow their bucket's workspace are re-enqueued one
+power-of-two bucket up (the bucketed recompilation contract of
+core/frontier.py), so a request stream compiles at most O(log) distinct
+shapes per (method, backend).  Idle pools beyond ``lru_pools`` are evicted
+least-recently-used to bound device memory; XLA's jit cache keeps the
+compiled kernels, so re-creating an evicted pool is cheap.
+
+Backends
+--------
+``backend="dense"`` lanes carry f32[n] state vectors (fast lookups, memory
+O(n) per lane).  ``backend="sparse"`` lanes carry :class:`SparseVec`
+``(ids, vals)`` pairs of capacity ``cap_v`` — per-lane live state O(cap_v),
+independent of n — and are harvested with the sparse sweep
+(:func:`repro.core.sweep.sweep_cut_sparse`), so a sparse request never
+materializes a dense vector anywhere on its path.  ``backend="auto"``
+(default) picks per request via :func:`repro.core.batched_sparse.pick_backend`
+(sparse iff n ≥ 2·ratio·cap_v); a request can pin its lane type with
+``ClusterRequest.backend``.  The sparse state exists only for plain
+PR-Nibble (β = 1): HK-PR or β-selection requests always serve dense.
+
+Capacity-ladder / retry contract: buckets follow the single-seed drivers'
+doubling schedule (cap_f, cap_v clamped at n+1; cap_e unclamped to
+``max_cap_e``; sweep caps likewise), so a request promoted b buckets up
+computes bit-identically to the single-seed driver retrying b times.
+Recompile boundary: (method, backend, statics, batch_slots, bucket) — all
+dynamic knobs (seed, α, ε, lane occupancy) move through traced values.
 """
 from __future__ import annotations
 
@@ -32,8 +53,12 @@ import jax.numpy as jnp
 from repro.graphs.csr import CSRGraph
 from repro.core.pr_nibble import (MAX_ITERS, pr_nibble_init,
                                   pr_nibble_round, pr_nibble_alive)
+from repro.core.pr_nibble_sparse import (pr_nibble_sparse_init,
+                                         pr_nibble_sparse_round,
+                                         pr_nibble_sparse_alive)
 from repro.core.hk_pr import hk_pr_init, hk_pr_round, hk_pr_alive
-from repro.core.sweep import sweep_cut_dense
+from repro.core.sweep import sweep_cut_dense, sweep_cut_sparse
+from repro.core.batched_sparse import pick_backend
 
 __all__ = ["ClusterRequest", "ClusterResult", "LocalClusterEngine"]
 
@@ -49,6 +74,7 @@ class ClusterRequest:
     beta: float = 1.0          # PR-Nibble top-β round selection
     N: int = 10                # HK-PR Taylor degree
     t: float = 5.0             # HK-PR temperature
+    backend: Optional[str] = None  # None = engine default; "dense" | "sparse"
 
 
 @dataclasses.dataclass
@@ -63,6 +89,7 @@ class ClusterResult:
     iterations: int
     bucket: int                # capacity bucket that served the request
     overflow: bool             # True only if every bucket overflowed
+    backend: str = "dense"     # lane type that served the request
 
 
 # --------------------------------------------------------------- step kernels
@@ -81,6 +108,31 @@ def _prn_step(graph, state, eps, alpha, active, rounds: int,
         def body(c):
             s2, k = c
             return (pr_nibble_round(graph, s2, e, a, optimized, cap_e, beta),
+                    k + 1)
+
+        s2, _ = jax.lax.while_loop(cond, body, (s, jnp.asarray(0, jnp.int32)))
+        return s2
+    return jax.vmap(one)(state, eps, alpha, active)
+
+
+@functools.partial(jax.jit, static_argnums=(5, 6, 7))
+def _prns_step(graph, state, eps, alpha, active, rounds: int,
+               optimized: bool, cap_e: int):
+    """Advance each active lane up to ``rounds`` *sparse* PR-Nibble rounds.
+
+    ``state`` is a vmapped :class:`PRNibbleSparseState` (SparseVec leaves
+    with a leading lane axis); same stepping structure as :func:`_prn_step`,
+    so a sparse lane's trajectory is identical to the single-seed sparse
+    driver's.
+    """
+    def one(s, e, a, act):
+        def cond(c):
+            s2, k = c
+            return act & (k < rounds) & pr_nibble_sparse_alive(s2, MAX_ITERS)
+
+        def body(c):
+            s2, k = c
+            return (pr_nibble_sparse_round(graph, s2, e, a, optimized, cap_e),
                     k + 1)
 
         s2, _ = jax.lax.while_loop(cond, body, (s, jnp.asarray(0, jnp.int32)))
@@ -119,15 +171,22 @@ def _hk_inject(state, lane, seed, n: int, cap_f: int):
                         state, hk_pr_init(seed, n, cap_f))
 
 
+@functools.partial(jax.jit, static_argnums=(3, 4, 5))
+def _prns_inject(state, lane, seed, n: int, cap_f: int, cap_v: int):
+    return jax.tree.map(lambda buf, v: buf.at[lane].set(v),
+                        state, pr_nibble_sparse_init(seed, n, cap_f, cap_v))
+
+
 # ----------------------------------------------------------------- lane pool
 
 class _Pool:
-    """Fixed-shape lane pool for one (method, statics, capacity bucket)."""
+    """Fixed-shape lane pool for one (method, backend, statics, bucket)."""
 
     def __init__(self, engine: "LocalClusterEngine", method: str,
-                 statics: tuple, bucket: int):
+                 backend: str, statics: tuple, bucket: int):
         self.engine = engine
         self.method = method
+        self.backend = backend
         self.statics = statics
         self.bucket = bucket
         n = engine.graph.n
@@ -135,24 +194,29 @@ class _Pool:
         self.cap_e = engine.cap_e << bucket
         self.cap_n = min(engine.cap_n << bucket, n)
         self.sweep_cap_e = engine.sweep_cap_e << bucket
+        self.cap_v = min(engine.cap_v << bucket, n + 1)
         B = engine.batch_slots
-        init = pr_nibble_init if method == "pr_nibble" else hk_pr_init
         # lanes start inactive; injected states overwrite these placeholders
-        self.state = jax.vmap(lambda s: init(s, n, self.cap_f))(
-            jnp.zeros((B,), jnp.int32))
+        if backend == "sparse":
+            init = lambda s: pr_nibble_sparse_init(s, n, self.cap_f, self.cap_v)
+        elif method == "pr_nibble":
+            init = lambda s: pr_nibble_init(s, n, self.cap_f)
+        else:
+            init = lambda s: hk_pr_init(s, n, self.cap_f)
+        self.state = jax.vmap(init)(jnp.zeros((B,), jnp.int32))
         self.eps = np.zeros(B, np.float32)
         self.alpha = np.zeros(B, np.float32)
         self.lane: List[Optional[Tuple[int, ClusterRequest]]] = [None] * B
         self.queue: deque = deque()
         engine.stats["pools_created"] += 1
-        engine.stats["bucket_shapes"].add((method, B, self.cap_f, self.cap_e))
+        engine.stats["bucket_shapes"].add(
+            (method, backend, B, self.cap_f, self.cap_e))
 
     def has_work(self) -> bool:
         return bool(self.queue) or any(l is not None for l in self.lane)
 
     def refill(self) -> None:
         n = self.engine.graph.n
-        inject = _prn_inject if self.method == "pr_nibble" else _hk_inject
         for i in range(len(self.lane)):
             if self.lane[i] is not None or not self.queue:
                 continue
@@ -160,9 +224,15 @@ class _Pool:
             self.lane[i] = (idx, req)
             self.eps[i] = req.eps
             self.alpha[i] = req.alpha
-            self.state = inject(self.state, jnp.asarray(i, jnp.int32),
-                                jnp.asarray(req.seed, jnp.int32),
-                                n, self.cap_f)
+            lane = jnp.asarray(i, jnp.int32)
+            seed = jnp.asarray(req.seed, jnp.int32)
+            if self.backend == "sparse":
+                self.state = _prns_inject(self.state, lane, seed, n,
+                                          self.cap_f, self.cap_v)
+            elif self.method == "pr_nibble":
+                self.state = _prn_inject(self.state, lane, seed, n, self.cap_f)
+            else:
+                self.state = _hk_inject(self.state, lane, seed, n, self.cap_f)
             self.engine.stats["injections"] += 1
 
     def step(self) -> None:
@@ -171,7 +241,13 @@ class _Pool:
             return
         g = self.engine.graph
         rounds = self.engine.rounds_per_step
-        if self.method == "pr_nibble":
+        if self.backend == "sparse":
+            optimized, _beta = self.statics
+            self.state = _prns_step(g, self.state, jnp.asarray(self.eps),
+                                    jnp.asarray(self.alpha),
+                                    jnp.asarray(active), rounds,
+                                    optimized, self.cap_e)
+        elif self.method == "pr_nibble":
             optimized, beta = self.statics
             self.state = _prn_step(g, self.state, jnp.asarray(self.eps),
                                    jnp.asarray(self.alpha),
@@ -210,13 +286,25 @@ class _Pool:
         n = eng.graph.n
         cap_n, cap_se = self.cap_n, self.sweep_cap_e
         max_cap_se = eng.sweep_cap_e << eng.max_bucket
-        p_i = self.state.p[i]
-        while True:
-            sw = sweep_cut_dense(eng.graph, p_i, cap_n, cap_se)
-            if not bool(sw.overflow) or (cap_n >= n and cap_se >= max_cap_se):
-                break
-            cap_n = min(cap_n * 2, n)
-            cap_se = min(cap_se * 2, max_cap_se)
+        if self.backend == "sparse":
+            # sparse lanes sweep their own support — the grid is cap_v, so
+            # only the sweep edge workspace can need a retry
+            p_sv = jax.tree.map(lambda buf: buf[i], self.state.p)
+            while True:
+                sw = sweep_cut_sparse(eng.graph, p_sv.ids, p_sv.vals,
+                                      p_sv.count, cap_se)
+                if not bool(sw.overflow) or cap_se >= max_cap_se:
+                    break
+                cap_se = min(cap_se * 2, max_cap_se)
+        else:
+            p_i = self.state.p[i]
+            while True:
+                sw = sweep_cut_dense(eng.graph, p_i, cap_n, cap_se)
+                if not bool(sw.overflow) or (cap_n >= n and
+                                             cap_se >= max_cap_se):
+                    break
+                cap_n = min(cap_n * 2, n)
+                cap_se = min(cap_se * 2, max_cap_se)
         overflowed = overflowed or bool(sw.overflow)
         st = self.state
         size = int(sw.best_size)
@@ -233,6 +321,7 @@ class _Pool:
             iterations=iters,
             bucket=self.bucket,
             overflow=overflowed,
+            backend=self.backend,
         )
 
 
@@ -252,13 +341,23 @@ class LocalClusterEngine:
                  cap_f: int = 1 << 12, cap_e: int = 1 << 16,
                  cap_n: int = 1 << 11, sweep_cap_e: int = 1 << 17,
                  max_cap_e: int = 1 << 26, rounds_per_step: int = 16,
-                 lru_pools: int = 4):
+                 lru_pools: int = 4, cap_v: int = 1 << 12,
+                 backend: str = "auto", sparse_ratio: int = 4):
+        """``backend`` is the engine-wide default lane type: "dense",
+        "sparse", or "auto" (pick per request by the graph-size/K rule of
+        :func:`repro.core.batched_sparse.pick_backend` with ``sparse_ratio``).
+        ``cap_v`` is the sparse lanes' value capacity K at bucket 0."""
+        if backend not in ("auto", "dense", "sparse"):
+            raise ValueError(f"unknown backend: {backend!r}")
         self.graph = graph
         self.batch_slots = batch_slots
         self.cap_f = cap_f
         self.cap_e = cap_e
         self.cap_n = cap_n
         self.sweep_cap_e = sweep_cap_e
+        self.cap_v = cap_v
+        self.backend = backend
+        self.sparse_ratio = sparse_ratio
         self.rounds_per_step = rounds_per_step
         self.lru_pools = lru_pools
         self.max_bucket = max(0, (max_cap_e // cap_e).bit_length() - 1)
@@ -271,6 +370,26 @@ class LocalClusterEngine:
 
     # -- scheduling ----------------------------------------------------------
 
+    def _resolve_backend(self, req: ClusterRequest) -> str:
+        """Which lane type serves ``req``: its pin, else the engine default,
+        with "auto" resolved by the graph-size/K heuristic.  Sparse state
+        exists only for plain PR-Nibble (β = 1): a *request-level* sparse pin
+        on an unsupported query is an error; an engine-level "sparse" default
+        or an "auto" resolution falls back to dense for those queries."""
+        b = req.backend if req.backend is not None else self.backend
+        if b not in ("auto", "dense", "sparse"):
+            raise ValueError(f"unknown backend: {b!r}")
+        sparse_ok = req.method == "pr_nibble" and req.beta == 1.0
+        if not sparse_ok:
+            if req.backend == "sparse":
+                raise ValueError(
+                    f"backend='sparse' supports only pr_nibble with beta=1.0 "
+                    f"(got method={req.method!r}, beta={req.beta})")
+            return "dense"
+        if b == "auto":
+            b = pick_backend(self.graph.n, self.cap_v, self.sparse_ratio)
+        return b
+
     def _pool_key(self, req: ClusterRequest, bucket: int) -> tuple:
         if req.method == "pr_nibble":
             statics = (req.optimized, req.beta)
@@ -278,13 +397,13 @@ class LocalClusterEngine:
             statics = (req.N, req.t)
         else:
             raise ValueError(f"unknown method: {req.method!r}")
-        return (req.method, statics, bucket)
+        return (req.method, self._resolve_backend(req), statics, bucket)
 
     def _enqueue(self, idx: int, req: ClusterRequest, bucket: int) -> None:
         key = self._pool_key(req, bucket)
         pool = self.pools.get(key)
         if pool is None:
-            pool = _Pool(self, req.method, key[1], bucket)
+            pool = _Pool(self, req.method, key[1], key[2], bucket)
             self.pools[key] = pool
         self.pools.move_to_end(key)
         pool.queue.append((idx, req))   # before evict: a pool with work is safe
