@@ -1,0 +1,82 @@
+"""Op-layer micro-benchmarks: the four hot primitives, per backend.
+
+Times each ``repro.core.ops`` op under ``backend="xla"`` and
+``backend="pallas"`` on representative driver shapes (scatter batches the
+size of an edge workspace, merges the size of a SparseVec round, scans the
+size of a sweep grid).  On CPU the Pallas backend runs in interpret mode —
+wall time there measures the *dispatch pipeline*, not the kernel (the TPU
+story lives in the roofline docs) — but every row doubles as a smoke-level
+correctness probe: each pallas timing asserts bitwise agreement with the
+xla reference before it is reported, so the CI ``--smoke`` gate exercises
+the full kernel path on every run.
+"""
+import numpy as np
+import jax.numpy as jnp
+
+from repro.core import ops
+from repro.kernels import ops as kops
+from .common import get_graph, emit, timeit
+
+
+def _assert_bitwise(a, b, what):
+    an = [np.atleast_1d(np.asarray(t))
+          for t in (a if isinstance(a, tuple) else (a,))]
+    bn = [np.atleast_1d(np.asarray(t))
+          for t in (b if isinstance(b, tuple) else (b,))]
+    for x, y in zip(an, bn):
+        if not np.array_equal(x.view(np.uint8), y.view(np.uint8)):
+            raise AssertionError(f"{what}: pallas != xla")
+
+
+def run(smoke: bool = False):
+    rng = np.random.default_rng(0)
+    n = 1 << 12 if smoke else 1 << 16
+    m = 1 << 13 if smoke else 1 << 18
+
+    # scatter_add — the fetchAdd batch of one push round
+    vec = jnp.asarray(rng.random(n), jnp.float32)
+    idx = jnp.asarray(rng.integers(0, n, m), jnp.int32)
+    vals = jnp.asarray(rng.random(m), jnp.float32)
+    valid = jnp.asarray(rng.random(m) < 0.9)
+    outs = {}
+    for backend in ("xla", "pallas"):
+        us, outs[backend] = timeit(ops.scatter_add, vec, idx, vals, valid,
+                                   backend=backend, prime=not smoke)
+        emit(f"ops/scatter_add_{backend}", us, f"n={n};m={m}")
+    _assert_bitwise(outs["xla"], outs["pallas"], "scatter_add")
+
+    # segment_merge — one sv_merge_add of a sparse round
+    cap = 1 << 10 if smoke else 1 << 12
+    ids = jnp.asarray(rng.integers(0, n + 1, cap + m // 4), jnp.int32)
+    mvals = jnp.asarray(rng.random(cap + m // 4), jnp.float32)
+    for backend in ("xla", "pallas"):
+        us, outs[backend] = timeit(ops.segment_merge, ids, mvals, n, cap,
+                                   backend=backend, prime=not smoke)
+        emit(f"ops/segment_merge_{backend}", us,
+             f"stream={int(ids.shape[0])};cap={cap}")
+    _assert_bitwise(outs["xla"], outs["pallas"], "segment_merge")
+
+    # prefix_sum — the sweep's int32 difference-array scan
+    x = jnp.asarray(rng.integers(-3, 4, m), jnp.int32)
+    for backend in ("xla", "pallas"):
+        us, outs[backend] = timeit(ops.prefix_sum, x, backend=backend,
+                                   prime=not smoke)
+        emit(f"ops/prefix_sum_i32_{backend}", us, f"n={m}")
+    _assert_bitwise(outs["xla"], outs["pallas"], "prefix_sum")
+
+    # diffusion_spmv — saturated round on the hybrid ELL layout (allclose op)
+    g = get_graph("sbm-planted" if smoke else "randLocal-50k")
+    nbr, wgt, es, ed, ew, n_pad, W = kops.pack_banded_ell(g, halo=2)
+    p = jnp.asarray(rng.random(n_pad), jnp.float32)
+    for backend in ("xla", "pallas"):
+        us, outs[backend] = timeit(ops.diffusion_spmv, nbr, wgt, es, ed, ew,
+                                   p, halo=2, backend=backend,
+                                   prime=not smoke)
+        emit(f"ops/diffusion_spmv_{backend}", us, f"n={n_pad};W={W}")
+    np.testing.assert_allclose(np.asarray(outs["xla"]),
+                               np.asarray(outs["pallas"]), rtol=1e-5,
+                               atol=1e-6)
+
+
+if __name__ == "__main__":
+    run()

@@ -20,11 +20,11 @@ def main() -> None:
                     help="smallest config per benchmark; used by CI")
     ap.add_argument("--only", default=None,
                     help="comma list: table1,table3,fig2,fig6,fig9,fig10,"
-                         "kernels,batched,sparse_batched")
+                         "kernels,batched,sparse_batched,ops")
     args = ap.parse_args()
     from . import (table1_pushes, table3_runtimes, fig2_opt_rule, fig6_params,
                    fig9_sweep_scaling, fig10_ncp, kernels_bench, batched_bench,
-                   sparse_batched_bench)
+                   sparse_batched_bench, ops_microbench)
     smoke = args.smoke
     suites = {
         "table1": lambda: table1_pushes.run(smoke=smoke),
@@ -36,6 +36,7 @@ def main() -> None:
         "kernels": lambda: kernels_bench.run(smoke=smoke),
         "batched": lambda: batched_bench.run(smoke=smoke),
         "sparse_batched": lambda: sparse_batched_bench.run(smoke=smoke),
+        "ops": lambda: ops_microbench.run(smoke=smoke),
     }
     only = args.only.split(",") if args.only else list(suites)
     print("name,us_per_call,derived")

@@ -6,7 +6,9 @@ paper's own primitive vocabulary (prefix sum / filter / sort) on fixed-
 capacity frontiers — jit/vmap/shard_map-ready.  Sequential references in
 :mod:`repro.core.seq`.
 """
-from .frontier import Frontier, EdgeBatch, singleton, expand, pack_unique, next_pow2
+from . import ops
+from .frontier import (Frontier, EdgeBatch, singleton, expand, pack_unique,
+                       next_pow2, scatter_add_dense, scatter_set_dense)
 from .sweep import SweepResult, sweep_cut, sweep_cut_dense, sweep_cut_sparse
 from .nibble import NibbleResult, nibble, nibble_fixedcap
 from .pr_nibble import PRNibbleResult, pr_nibble, pr_nibble_fixedcap
@@ -33,7 +35,9 @@ from .ncp import NCPResult, ncp, ncp_batch
 from . import seq
 
 __all__ = [
+    "ops",
     "Frontier", "EdgeBatch", "singleton", "expand", "pack_unique", "next_pow2",
+    "scatter_add_dense", "scatter_set_dense",
     "SweepResult", "sweep_cut", "sweep_cut_dense", "sweep_cut_sparse",
     "NibbleResult", "nibble", "nibble_fixedcap",
     "PRNibbleResult", "pr_nibble", "pr_nibble_fixedcap",

@@ -68,10 +68,13 @@ __all__ = [
 
 # ------------------------------------------------------------ jitted kernels
 
-@functools.partial(jax.jit, static_argnums=(4, 5, 6, 7, 8))
+@functools.partial(jax.jit, static_argnums=(4, 5, 6, 7, 8),
+                   static_argnames=("optimized", "cap_f", "cap_e",
+                                    "max_iters", "beta", "backend"))
 def batched_pr_nibble_fixedcap(graph: CSRGraph, seeds, eps, alpha,
                                optimized: bool, cap_f: int, cap_e: int,
-                               max_iters: int = MAX_ITERS, beta: float = 1.0):
+                               max_iters: int = MAX_ITERS, beta: float = 1.0,
+                               *, backend: str = "xla"):
     """vmap of :func:`pr_nibble_fixedcap`: seeds[B] with per-seed (eps, alpha).
 
     Shapes: ``seeds`` int32[B], ``eps``/``alpha`` f32[B]; returns a
@@ -80,24 +83,28 @@ def batched_pr_nibble_fixedcap(graph: CSRGraph, seeds, eps, alpha,
     """
     def one(s, e, a):
         return pr_nibble_fixedcap(graph, s, e, a, optimized, cap_f, cap_e,
-                                  max_iters, beta)
+                                  max_iters, beta, backend=backend)
     return jax.vmap(one)(seeds, eps, alpha)
 
 
-@functools.partial(jax.jit, static_argnums=(2, 4, 5, 6))
+@functools.partial(jax.jit, static_argnums=(2, 4, 5, 6),
+                   static_argnames=("N", "t", "cap_f", "cap_e", "backend"))
 def batched_hk_pr_fixedcap(graph: CSRGraph, seeds, N: int, eps, t: float,
-                           cap_f: int, cap_e: int):
+                           cap_f: int, cap_e: int, *, backend: str = "xla"):
     """vmap of :func:`hk_pr_fixedcap`: seeds[B] with per-seed eps (N, t static).
 
     Shapes: ``seeds`` int32[B], ``eps`` f32[B]; result leaves lead with [B].
     """
     def one(s, e):
-        return hk_pr_fixedcap(graph, s, N, e, t, cap_f, cap_e)
+        return hk_pr_fixedcap(graph, s, N, e, t, cap_f, cap_e,
+                              backend=backend)
     return jax.vmap(one)(seeds, eps)
 
 
-@functools.partial(jax.jit, static_argnums=(2, 3))
-def batched_sweep_cut(graph: CSRGraph, p, cap_n: int, cap_e: int):
+@functools.partial(jax.jit, static_argnums=(2, 3),
+                   static_argnames=("cap_n", "cap_e", "backend"))
+def batched_sweep_cut(graph: CSRGraph, p, cap_n: int, cap_e: int, *,
+                      backend: str = "xla"):
     """vmap of :func:`sweep_cut_dense` over p[B, n] diffusion vectors.
 
     ``p`` is f32[B, n]; returns a :class:`SweepResult` with leading [B] axis
@@ -105,7 +112,8 @@ def batched_sweep_cut(graph: CSRGraph, p, cap_n: int, cap_e: int):
     :func:`repro.core.batched_sparse.batched_sparse_sweep_cut` for the
     O(cap_n + cap_e)-per-lane variant that never touches f32[n].
     """
-    return jax.vmap(lambda q: sweep_cut_dense(graph, q, cap_n, cap_e))(p)
+    return jax.vmap(
+        lambda q: sweep_cut_dense(graph, q, cap_n, cap_e, backend))(p)
 
 
 class _ClusterLanes(NamedTuple):
@@ -121,11 +129,14 @@ class _ClusterLanes(NamedTuple):
     overflow: jnp.ndarray          # bool[B] — diffusion OR sweep overflow
 
 
-@functools.partial(jax.jit, static_argnums=(4, 5, 6, 7, 8, 9))
+@functools.partial(jax.jit, static_argnums=(4, 5, 6, 7, 8, 9),
+                   static_argnames=("optimized", "cap_f", "cap_e", "cap_n",
+                                    "sweep_cap_e", "beta", "backend"))
 def batched_cluster_fixedcap(graph: CSRGraph, seeds, eps, alpha,
                              optimized: bool, cap_f: int, cap_e: int,
                              cap_n: int, sweep_cap_e: int,
-                             beta: float = 1.0) -> _ClusterLanes:
+                             beta: float = 1.0, *,
+                             backend: str = "xla") -> _ClusterLanes:
     """Fused PR-Nibble + sweep cut per seed — the NCP/serving inner kernel.
 
     Unlike the plain diffusion kernels this never materializes p[B, n] in the
@@ -133,8 +144,8 @@ def batched_cluster_fixedcap(graph: CSRGraph, seeds, eps, alpha,
     """
     def one(s, e, a):
         res = pr_nibble_fixedcap(graph, s, e, a, optimized, cap_f, cap_e,
-                                 MAX_ITERS, beta)
-        sw = sweep_cut_dense(graph, res.p, cap_n, sweep_cap_e)
+                                 MAX_ITERS, beta, backend=backend)
+        sw = sweep_cut_dense(graph, res.p, cap_n, sweep_cap_e, backend)
         return _ClusterLanes(
             conductance=sw.conductance,
             best_conductance=sw.best_conductance,
@@ -256,8 +267,8 @@ class _CapLadder:
 def batched_pr_nibble(graph: CSRGraph, seeds, eps=1e-7, alpha=0.01,
                       optimized: bool = True, cap_f: int = 1 << 12,
                       cap_e: int = 1 << 16, max_cap_e: int = 1 << 26,
-                      beta: float = 1.0,
-                      max_iters: int = MAX_ITERS) -> BatchedDiffusionResult:
+                      beta: float = 1.0, max_iters: int = MAX_ITERS,
+                      backend: str = "xla") -> BatchedDiffusionResult:
     """Batched bucketed driver: one dispatch per capacity bucket, per-seed
     overflow retry.  Per-seed output is identical to looping
     :func:`repro.core.pr_nibble.pr_nibble` (same capacity schedule).
@@ -279,7 +290,7 @@ def batched_pr_nibble(graph: CSRGraph, seeds, eps=1e-7, alpha=0.01,
         res = batched_pr_nibble_fixedcap(
             graph, jnp.asarray(seeds[sel]), jnp.asarray(eps[sel]),
             jnp.asarray(alpha[sel]), optimized, lad.cap_f, lad.cap_e,
-            max_iters, beta)
+            max_iters, beta, backend=backend)
         return res._asdict(), (sel.size, lad.cap_f, lad.cap_e)
 
     buckets = _bucketed_retry(B, dispatch, lad.advance, lad.exhausted, out, ovf)
@@ -288,7 +299,8 @@ def batched_pr_nibble(graph: CSRGraph, seeds, eps=1e-7, alpha=0.01,
 
 def batched_hk_pr(graph: CSRGraph, seeds, N: int = 20, eps=1e-7,
                   t: float = 10.0, cap_f: int = 1 << 12, cap_e: int = 1 << 16,
-                  max_cap_e: int = 1 << 26) -> BatchedDiffusionResult:
+                  max_cap_e: int = 1 << 26,
+                  backend: str = "xla") -> BatchedDiffusionResult:
     """Batched bucketed HK-PR driver, mirroring :func:`batched_pr_nibble`."""
     seeds, B, eps = _prep_batch(seeds, eps)
     n = graph.n
@@ -301,7 +313,7 @@ def batched_hk_pr(graph: CSRGraph, seeds, N: int = 20, eps=1e-7,
     def dispatch(sel):
         res = batched_hk_pr_fixedcap(graph, jnp.asarray(seeds[sel]), N,
                                      jnp.asarray(eps[sel]), t,
-                                     lad.cap_f, lad.cap_e)
+                                     lad.cap_f, lad.cap_e, backend=backend)
         return res._asdict(), (sel.size, lad.cap_f, lad.cap_e)
 
     buckets = _bucketed_retry(B, dispatch, lad.advance, lad.exhausted, out, ovf)
@@ -313,7 +325,8 @@ def batched_cluster(graph: CSRGraph, seeds, eps=1e-6, alpha=0.01,
                     optimized: bool = True, cap_f: int = 1 << 12,
                     cap_e: int = 1 << 16, cap_n: int = 1 << 12,
                     sweep_cap_e: int = 1 << 18, max_cap_e: int = 1 << 26,
-                    beta: float = 1.0) -> BatchedClusterResult:
+                    beta: float = 1.0,
+                    backend: str = "xla") -> BatchedClusterResult:
     """Batched PR-Nibble + sweep with per-seed retry on *either* the
     diffusion or sweep workspace overflowing (all capacities double).
 
@@ -338,7 +351,7 @@ def batched_cluster(graph: CSRGraph, seeds, eps=1e-6, alpha=0.01,
         res = batched_cluster_fixedcap(
             graph, jnp.asarray(seeds[sel]), jnp.asarray(eps[sel]),
             jnp.asarray(alpha[sel]), optimized, lad.cap_f, lad.cap_e,
-            min(lad.cap_n, n), lad.sweep_cap_e, beta)
+            min(lad.cap_n, n), lad.sweep_cap_e, beta, backend=backend)
         fields = res._asdict()
         fields.pop("order")            # not part of the host result
         return fields, (sel.size, lad.cap_f, lad.cap_e)

@@ -65,10 +65,13 @@ __all__ = [
 
 # ------------------------------------------------------------ jitted kernels
 
-@functools.partial(jax.jit, static_argnums=(4, 5, 6, 7, 8))
+@functools.partial(jax.jit, static_argnums=(4, 5, 6, 7, 8),
+                   static_argnames=("optimized", "cap_f", "cap_e", "cap_v",
+                                    "max_iters", "backend"))
 def batched_pr_nibble_sparse_fixedcap(graph: CSRGraph, seeds, eps, alpha,
                                       optimized: bool, cap_f: int, cap_e: int,
-                                      cap_v: int, max_iters: int = 10_000):
+                                      cap_v: int, max_iters: int = 10_000,
+                                      *, backend: str = "xla"):
     """vmap of :func:`pr_nibble_sparse_fixedcap`: seeds[B], per-seed (ε, α).
 
     Shapes: ``seeds`` int32[B], ``eps``/``alpha`` f32[B].  Returns a
@@ -79,12 +82,15 @@ def batched_pr_nibble_sparse_fixedcap(graph: CSRGraph, seeds, eps, alpha,
     """
     def one(s, e, a):
         return pr_nibble_sparse_fixedcap(graph, s, e, a, optimized,
-                                         cap_f, cap_e, cap_v, max_iters)
+                                         cap_f, cap_e, cap_v, max_iters,
+                                         backend=backend)
     return jax.vmap(one)(seeds, eps, alpha)
 
 
-@functools.partial(jax.jit, static_argnums=(4,))
-def batched_sparse_sweep_cut(graph: CSRGraph, ids, vals, nnz, cap_e: int):
+@functools.partial(jax.jit, static_argnums=(4,),
+                   static_argnames=("cap_e", "backend"))
+def batched_sparse_sweep_cut(graph: CSRGraph, ids, vals, nnz, cap_e: int, *,
+                             backend: str = "xla"):
     """vmap of :func:`sweep_cut_sparse` over B sparse diffusion vectors.
 
     Shapes: ``ids`` int32[B, cap_n] (sentinel ``n`` beyond each lane's
@@ -93,7 +99,7 @@ def batched_sparse_sweep_cut(graph: CSRGraph, ids, vals, nnz, cap_e: int):
     memory O(cap_n + cap_e), never O(n).
     """
     def one(i, v, c):
-        return sweep_cut_sparse(graph, i, v, c, cap_e)
+        return sweep_cut_sparse(graph, i, v, c, cap_e, backend=backend)
     return jax.vmap(one)(ids, vals, nnz)
 
 
@@ -110,10 +116,13 @@ class _SparseClusterLanes(NamedTuple):
     overflow: jnp.ndarray          # bool[B] — diffusion OR sweep overflow
 
 
-@functools.partial(jax.jit, static_argnums=(4, 5, 6, 7, 8))
+@functools.partial(jax.jit, static_argnums=(4, 5, 6, 7, 8),
+                   static_argnames=("optimized", "cap_f", "cap_e", "cap_v",
+                                    "sweep_cap_e", "backend"))
 def batched_cluster_sparse_fixedcap(graph: CSRGraph, seeds, eps, alpha,
                                     optimized: bool, cap_f: int, cap_e: int,
-                                    cap_v: int, sweep_cap_e: int
+                                    cap_v: int, sweep_cap_e: int, *,
+                                    backend: str = "xla"
                                     ) -> _SparseClusterLanes:
     """Fused sparse PR-Nibble + sparse sweep per seed — no dense vector ever.
 
@@ -124,9 +133,9 @@ def batched_cluster_sparse_fixedcap(graph: CSRGraph, seeds, eps, alpha,
     """
     def one(s, e, a):
         res = pr_nibble_sparse_fixedcap(graph, s, e, a, optimized,
-                                        cap_f, cap_e, cap_v)
+                                        cap_f, cap_e, cap_v, backend=backend)
         sw = sweep_cut_sparse(graph, res.p.ids, res.p.vals, res.p.count,
-                              sweep_cap_e)
+                              sweep_cap_e, backend=backend)
         return _SparseClusterLanes(
             conductance=sw.conductance,
             best_conductance=sw.best_conductance,
@@ -198,7 +207,7 @@ def batched_pr_nibble_sparse(graph: CSRGraph, seeds, eps=1e-7, alpha=0.01,
                              optimized: bool = True, cap_f: int = 1 << 10,
                              cap_e: int = 1 << 14, cap_v: int = 1 << 12,
                              max_cap_e: int = 1 << 26,
-                             max_iters: int = 10_000
+                             max_iters: int = 10_000, backend: str = "xla"
                              ) -> BatchedSparseDiffusionResult:
     """Batched bucketed sparse driver: per-seed overflow retry on the
     (cap_f, cap_e, cap_v) ladder.  Per-seed output is bit-identical to
@@ -226,7 +235,7 @@ def batched_pr_nibble_sparse(graph: CSRGraph, seeds, eps=1e-7, alpha=0.01,
         res = batched_pr_nibble_sparse_fixedcap(
             graph, jnp.asarray(seeds[sel]), jnp.asarray(eps[sel]),
             jnp.asarray(alpha[sel]), optimized, lad.cap_f, lad.cap_e,
-            lad.cap_v, max_iters)
+            lad.cap_v, max_iters, backend=backend)
         fields = dict(p_ids=res.p.ids, p_vals=res.p.vals, p_count=res.p.count,
                       r_ids=res.r.ids, r_vals=res.r.vals, r_count=res.r.count,
                       iterations=res.iterations, pushes=res.pushes,
@@ -241,7 +250,7 @@ def batched_cluster_sparse(graph: CSRGraph, seeds, eps=1e-6, alpha=0.01,
                            optimized: bool = True, cap_f: int = 1 << 10,
                            cap_e: int = 1 << 14, cap_v: int = 1 << 12,
                            sweep_cap_e: int = 1 << 18,
-                           max_cap_e: int = 1 << 26
+                           max_cap_e: int = 1 << 26, backend: str = "xla"
                            ) -> BatchedSparseClusterResult:
     """Batched fused sparse diffusion + sparse sweep with per-seed retry on
     *any* workspace (cap_f, cap_e, cap_v, sweep_cap_e) overflowing.
@@ -266,7 +275,7 @@ def batched_cluster_sparse(graph: CSRGraph, seeds, eps=1e-6, alpha=0.01,
         res = batched_cluster_sparse_fixedcap(
             graph, jnp.asarray(seeds[sel]), jnp.asarray(eps[sel]),
             jnp.asarray(alpha[sel]), optimized, lad.cap_f, lad.cap_e,
-            lad.cap_v, lad.sweep_cap_e)
+            lad.cap_v, lad.sweep_cap_e, backend=backend)
         fields = res._asdict()
         fields.pop("order")            # not part of the host result
         return fields, (sel.size, lad.cap_f, lad.cap_e, lad.cap_v)

@@ -32,6 +32,8 @@ import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
 from repro.graphs.partition import PartitionedCSR
+from . import ops
+from .frontier import scatter_add_dense, scatter_set_dense
 
 __all__ = ["DistPRNibbleResult", "dist_pr_nibble", "build_dist_pr_nibble"]
 
@@ -53,11 +55,12 @@ class _Shard(NamedTuple):
     overflow: jnp.ndarray
 
 
-def _local_expand(indptr, indices, deg, f_loc, f_valid, cap_e, rows_per):
+def _local_expand(indptr, indices, deg, f_loc, f_valid, cap_e, rows_per,
+                  backend="xla"):
     """Expand a local frontier (local ids) against the local CSR slab.
     Returns (slot, dst_global, evalid, total)."""
     degs = jnp.where(f_valid, deg[jnp.minimum(f_loc, rows_per - 1)], 0)
-    offs = jnp.cumsum(degs) - degs
+    offs = ops.prefix_sum(degs, backend=backend) - degs
     total = offs[-1] + degs[-1]
     j = jnp.arange(cap_e, dtype=jnp.int32)
     slot = jnp.searchsorted(offs, j, side="right").astype(jnp.int32) - 1
@@ -71,7 +74,8 @@ def _local_expand(indptr, indices, deg, f_loc, f_valid, cap_e, rows_per):
     return slot, dst, evalid & f_valid[slot], total
 
 
-def build_dist_pr_nibble(mesh, axis: str = "data", exchange: str = "a2a"):
+def build_dist_pr_nibble(mesh, axis: str = "data", exchange: str = "a2a",
+                         backend: str = "xla"):
     """Build the shard_map'd distributed PR-Nibble for a given mesh axis.
 
     ``exchange`` selects the contribution-routing collective:
@@ -80,6 +84,10 @@ def build_dist_pr_nibble(mesh, axis: str = "data", exchange: str = "a2a"):
       * "psum" — naive baseline: scatter into a full dense [n] buffer and
                  all-reduce it (O(n) bytes per round regardless of frontier
                  size — what the roofline comparison in §Perf quantifies).
+
+    ``backend`` routes every per-device scatter-add/scan through
+    :mod:`repro.core.ops` (the same op layer the single-chip drivers use —
+    the distributed engine is local pushes + a collective, nothing more).
 
     Returns fn(pg_arrays..., x, eps, alpha) -> DistPRNibbleResult, jit-able
     with in_shardings placing the partition slabs and state on `axis`.
@@ -102,10 +110,10 @@ def build_dist_pr_nibble(mesh, axis: str = "data", exchange: str = "a2a"):
             """Local ids with r ≥ d·ε, packed to cap_f."""
             above = (r_loc >= deg * eps) & (deg > 0)
             cnt = jnp.sum(above).astype(jnp.int32)
-            pos = jnp.cumsum(above) - 1
-            ids = jnp.full((cap_f,), rows_per, jnp.int32).at[
-                jnp.where(above, pos, cap_f)].set(
-                jnp.arange(rows_per, dtype=jnp.int32), mode="drop")
+            pos = ops.prefix_sum(above.astype(jnp.int32), backend=backend) - 1
+            ids = scatter_set_dense(
+                jnp.full((cap_f,), rows_per, jnp.int32), pos,
+                jnp.arange(rows_per, dtype=jnp.int32), above)
             return ids, jnp.minimum(cnt, cap_f), cnt > cap_f
 
         def cond(s: _Shard):
@@ -122,20 +130,20 @@ def build_dist_pr_nibble(mesh, axis: str = "data", exchange: str = "a2a"):
             p_gain = (2.0 * alpha / (1.0 + alpha)) * rf
             share = ((1.0 - alpha) / (1.0 + alpha)) * rf / dv
 
-            p_new = s.p.at[jnp.where(f_valid, f_loc, rows_per)].add(
-                p_gain, mode="drop")
-            r_new = s.r.at[jnp.where(f_valid, f_loc, rows_per)].set(
-                0.0, mode="drop")
+            p_new = scatter_add_dense(s.p, f_loc, p_gain, f_valid,
+                                      backend=backend)
+            r_new = scatter_set_dense(s.r, f_loc, 0.0, f_valid)
 
             slot, dst, evalid, _etot = _local_expand(
-                indptr, indices, deg, f_loc, f_valid, cap_e, rows_per)
+                indptr, indices, deg, f_loc, f_valid, cap_e, rows_per,
+                backend)
             contrib = jnp.where(evalid, share[slot], 0.0)
 
             if exchange == "psum":
                 # naive baseline: dense global buffer + all-reduce
-                dense = jnp.zeros((rows_per * D,), jnp.float32)
-                dense = dense.at[jnp.where(evalid, dst, rows_per * D)].add(
-                    contrib, mode="drop")
+                dense = scatter_add_dense(
+                    jnp.zeros((rows_per * D,), jnp.float32), dst, contrib,
+                    evalid, backend=backend)
                 dense = jax.lax.psum(dense, axis)
                 mine_slice = jax.lax.dynamic_slice_in_dim(
                     dense, base, rows_per, 0)
@@ -164,8 +172,8 @@ def build_dist_pr_nibble(mesh, axis: str = "data", exchange: str = "a2a"):
                 # local scatter-add: global → local ids
                 loc = recv_dst.reshape(-1) - base
                 ok = (loc >= 0) & (loc < rows_per)
-                r_new = r_new.at[jnp.where(ok, loc, rows_per)].add(
-                    jnp.where(ok, recv_val.reshape(-1), 0.0), mode="drop")
+                r_new = scatter_add_dense(r_new, loc, recv_val.reshape(-1),
+                                          ok, backend=backend)
 
             # replicated termination stats
             nxt_above = jnp.sum((r_new >= deg * eps) & (deg > 0))
@@ -177,11 +185,12 @@ def build_dist_pr_nibble(mesh, axis: str = "data", exchange: str = "a2a"):
                           global_front=gfront.astype(jnp.int32),
                           overflow=s.overflow | ovf)
 
-        # init: seed owner puts mass 1
+        # init: seed owner puts mass 1 (drop-sentinel masked — the non-owner
+        # previously relied on adding 0.0 at a clipped in-range index)
         r0 = jnp.zeros((rows_per,), jnp.float32)
         mine = (x >= base) & (x < base + rows_per)
-        r0 = r0.at[jnp.clip(x - base, 0, rows_per - 1)].add(
-            jnp.where(mine, 1.0, 0.0))
+        r0 = scatter_add_dense(r0, jnp.clip(x - base, 0, rows_per - 1),
+                               jnp.float32(1.0), mine)
         s0 = _Shard(p=jnp.zeros((rows_per,), jnp.float32), r=r0,
                     t=jnp.asarray(0, jnp.int32),
                     pushes=jnp.asarray(0, jnp.int32),
@@ -207,10 +216,10 @@ def build_dist_pr_nibble(mesh, axis: str = "data", exchange: str = "a2a"):
 def dist_pr_nibble(pg: PartitionedCSR, mesh, x: int, eps: float = 1e-7,
                    alpha: float = 0.01, axis: str = "data",
                    cap_f: int = 1 << 12, cap_e: int = 1 << 16,
-                   cap_x: int = 1 << 12, max_cap_e: int = 1 << 24
-                   ) -> DistPRNibbleResult:
+                   cap_x: int = 1 << 12, max_cap_e: int = 1 << 24,
+                   backend: str = "xla") -> DistPRNibbleResult:
     """Driver: distributed PR-Nibble (optimized rule) with bucket retry."""
-    make = build_dist_pr_nibble(mesh, axis)
+    make = build_dist_pr_nibble(mesh, axis, backend=backend)
     while True:
         fn = jax.jit(make(pg.rows_per, cap_f, cap_e, cap_x))
         p, r, t, pushes, ovf = fn(

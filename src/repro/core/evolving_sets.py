@@ -16,7 +16,9 @@ import jax
 import jax.numpy as jnp
 
 from repro.graphs.csr import CSRGraph
-from .frontier import Frontier, expand, pack_unique
+from . import ops
+from .frontier import (Frontier, expand, pack_unique, singleton,
+                       scatter_add_dense, scatter_set_dense)
 
 __all__ = ["EvolvingSetsResult", "evolving_sets"]
 
@@ -41,10 +43,12 @@ class _State(NamedTuple):
     overflow: jnp.ndarray
 
 
-@functools.partial(jax.jit, static_argnums=(2, 5, 6))
+@functools.partial(jax.jit, static_argnums=(2, 5, 6),
+                   static_argnames=("T", "cap_s", "cap_e", "backend"))
 def evolving_sets(graph: CSRGraph, x, T: int, B, phi,
                   cap_s: int = 1 << 12, cap_e: int = 1 << 16,
-                  key: jax.Array = None) -> EvolvingSetsResult:
+                  key: jax.Array = None, *,
+                  backend: str = "xla") -> EvolvingSetsResult:
     if key is None:
         key = jax.random.PRNGKey(0)
     n, m = graph.n, graph.m
@@ -54,8 +58,9 @@ def evolving_sets(graph: CSRGraph, x, T: int, B, phi,
         """vol(S), ∂(S), φ(S) via one expansion + membership mask."""
         svalid = S.valid()
         sids = jnp.where(svalid, S.ids, n)
-        in_S = jnp.zeros((n + 1,), bool).at[sids].set(svalid, mode="drop")
-        eb = expand(graph, S, cap_e)
+        in_S = scatter_set_dense(jnp.zeros((n + 1,), bool), sids, svalid,
+                                 svalid)
+        eb = expand(graph, S, cap_e, backend=backend)
         cut = jnp.sum(eb.valid & ~in_S[jnp.minimum(eb.dst, n)])
         vol = jnp.sum(jnp.where(svalid, deg[jnp.minimum(sids, n - 1)], 0))
         denom = jnp.minimum(vol, 2 * m - vol)
@@ -76,10 +81,12 @@ def evolving_sets(graph: CSRGraph, x, T: int, B, phi,
         move = (jax.random.uniform(k_stay) >= 0.5) & (d_x > 0)
         x_walk = jnp.where(move, nxt, s.x_walk)
 
-        # e(v, S) for v ∈ S ∪ ∂S via scatter-count over S's edges
+        # e(v, S) for v ∈ S ∪ ∂S: scatter-count over S's edges through the
+        # op layer (shared drop-sentinel convention, backend-dispatched)
         vol, _, _, eb, in_S = set_stats(s.S)
-        e_vS = jnp.zeros((n + 1,), jnp.int32)
-        e_vS = e_vS.at[jnp.where(eb.valid, eb.dst, n)].add(1, mode="drop")
+        e_vS = scatter_add_dense(jnp.zeros((n + 1,), jnp.int32), eb.dst,
+                                 jnp.ones(eb.dst.shape, jnp.int32), eb.valid,
+                                 backend=backend)
 
         def p_vS(v):
             dv = jnp.maximum(deg[jnp.minimum(v, n - 1)], 1)
@@ -94,7 +101,7 @@ def evolving_sets(graph: CSRGraph, x, T: int, B, phi,
         cands = jnp.concatenate([jnp.where(svalid, s.S.ids, n), eb.dst])
         cvalid = jnp.concatenate([svalid, eb.valid])
         keep = cvalid & (p_vS(cands) >= z) & (deg[jnp.minimum(cands, n - 1)] > 0)
-        S_new = pack_unique(cands, keep, n, cap_s)
+        S_new = pack_unique(cands, keep, n, cap_s, backend=backend)
 
         # step 4: stop on φ(S') < φ  (T / B limits are in `cond`)
         _, _, cond_new, eb2, _ = set_stats(S_new)
@@ -110,9 +117,7 @@ def evolving_sets(graph: CSRGraph, x, T: int, B, phi,
             overflow=s.overflow | (S_new.overflow & ~empty) | eb.overflow,
         )
 
-    S0 = Frontier(ids=jnp.full((cap_s,), n, jnp.int32).at[0].set(
-        jnp.asarray(x, jnp.int32)), count=jnp.asarray(1, jnp.int32),
-        overflow=jnp.asarray(False))
+    S0 = singleton(x, n, cap_s)
     _, _, cond0, _, _ = set_stats(S0)
     s0 = _State(S=S0, x_walk=jnp.asarray(x, jnp.int32), key=key,
                 t=jnp.asarray(0, jnp.int32), work=jnp.asarray(0, jnp.int32),

@@ -29,9 +29,11 @@ import jax
 import jax.numpy as jnp
 
 from repro.graphs.csr import CSRGraph
+from . import ops
 
 __all__ = ["Frontier", "EdgeBatch", "singleton", "expand", "pack_unique",
-           "next_pow2", "DEFAULT_CAPS"]
+           "next_pow2", "DEFAULT_CAPS", "scatter_add_dense",
+           "scatter_set_dense", "one_hot_f32"]
 
 DEFAULT_CAPS = dict(cap_f=1 << 12, cap_e=1 << 16)
 
@@ -84,18 +86,21 @@ def seed_set(vs: jnp.ndarray, count, n: int, cap_f: int) -> Frontier:
                     overflow=jnp.asarray(k > cap_f))
 
 
-def expand(graph: CSRGraph, frontier: Frontier, cap_e: int) -> EdgeBatch:
+def expand(graph: CSRGraph, frontier: Frontier, cap_e: int,
+           backend: str = "xla") -> EdgeBatch:
     """Enumerate all edges incident to the frontier into ``cap_e`` slots.
 
     Work O(cap_e log cap_f), depth O(log) — matches EDGEMAP's
-    work-proportional-to-outgoing-edges contract.
+    work-proportional-to-outgoing-edges contract.  ``backend`` routes the
+    degree prefix sum through :mod:`repro.core.ops` (int32 — exact on every
+    backend).
     """
     n = graph.n
     fvalid = frontier.valid()
     ids = jnp.where(fvalid, frontier.ids, n)
     degs = jnp.where(fvalid, graph.deg[jnp.minimum(ids, n - 1)], 0)
     degs = jnp.where(ids < n, degs, 0).astype(jnp.int32)
-    offs = jnp.cumsum(degs) - degs                      # exclusive prefix sum
+    offs = ops.prefix_sum(degs, backend=backend) - degs  # exclusive prefix sum
     total = offs[-1] + degs[-1]
     j = jnp.arange(cap_e, dtype=jnp.int32)
     # frontier slot owning edge slot j: last i with offs[i] <= j
@@ -112,7 +117,7 @@ def expand(graph: CSRGraph, frontier: Frontier, cap_e: int) -> EdgeBatch:
 
 
 def pack_unique(cands: jnp.ndarray, keep: jnp.ndarray, n: int,
-                cap_out: int) -> Frontier:
+                cap_out: int, backend: str = "xla") -> Frontier:
     """Filter + dedupe candidate vertex ids into a fresh frontier.
 
     ``cands`` may contain duplicates and sentinel entries; ``keep`` is the
@@ -124,7 +129,7 @@ def pack_unique(cands: jnp.ndarray, keep: jnp.ndarray, n: int,
     xs = jnp.sort(x)
     first = jnp.concatenate([jnp.array([True]), xs[1:] != xs[:-1]])
     sel = first & (xs < n)
-    pos = jnp.cumsum(sel) - 1
+    pos = ops.prefix_sum(sel.astype(jnp.int32), backend=backend) - 1
     count = jnp.sum(sel).astype(jnp.int32)
     out = jnp.full((cap_out,), n, dtype=jnp.int32)
     # drop writes beyond capacity; overflow flag reports the truncation
@@ -134,11 +139,28 @@ def pack_unique(cands: jnp.ndarray, keep: jnp.ndarray, n: int,
 
 
 def scatter_add_dense(vec: jnp.ndarray, idx: jnp.ndarray, vals: jnp.ndarray,
-                      valid: jnp.ndarray) -> jnp.ndarray:
-    """fetchAdd → XLA scatter-add: accumulate ``vals`` at ``idx`` (masked).
+                      valid: jnp.ndarray, backend: str = "xla") -> jnp.ndarray:
+    """fetchAdd → scatter-add: accumulate ``vals`` at ``idx`` (masked).
 
-    Deterministic (XLA scatter-add has a defined combine order), replacing the
-    paper's atomic fetch-and-add.
+    Deterministic on every backend (XLA scatter-add has a defined combine
+    order; the Pallas MXU path preserves it — see :mod:`repro.core.ops`),
+    replacing the paper's atomic fetch-and-add.
     """
+    return ops.scatter_add(vec, idx, vals, valid, backend=backend)
+
+
+def scatter_set_dense(vec: jnp.ndarray, idx: jnp.ndarray, vals,
+                      valid: jnp.ndarray) -> jnp.ndarray:
+    """Masked ``vec.at[idx].set(vals)`` with the shared drop-sentinel
+    convention (invalid lanes write nowhere).  Scatter-*set* has no combine,
+    so it has no backend axis — this helper exists so driver code stays free
+    of raw ``.at[`` sites outside ops.py/frontier.py."""
     safe = jnp.where(valid, idx, vec.shape[0])
-    return vec.at[safe].add(jnp.where(valid, vals, 0), mode="drop")
+    return vec.at[safe].set(jnp.where(valid, vals, jnp.zeros_like(vals)),
+                            mode="drop")
+
+
+def one_hot_f32(x, n: int) -> jnp.ndarray:
+    """f32[n] with a single 1.0 at vertex ``x`` — the unit seed mass every
+    dense diffusion starts from."""
+    return jnp.zeros((n,), jnp.float32).at[x].set(1.0)

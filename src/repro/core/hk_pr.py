@@ -22,7 +22,8 @@ import jax
 import jax.numpy as jnp
 
 from repro.graphs.csr import CSRGraph
-from .frontier import Frontier, expand, pack_unique, singleton, scatter_add_dense
+from .frontier import (Frontier, expand, pack_unique, singleton,
+                       scatter_add_dense, one_hot_f32)
 
 __all__ = ["HKPRResult", "HKPRState", "hk_pr", "hk_pr_fixedcap", "psis",
            "hk_pr_init", "hk_pr_round", "hk_pr_alive"]
@@ -57,7 +58,7 @@ class HKPRState(NamedTuple):
 
 
 def hk_pr_init(x, n: int, cap_f: int) -> HKPRState:
-    r0 = jnp.zeros((n,), jnp.float32).at[x].set(1.0)
+    r0 = one_hot_f32(x, n)
     return HKPRState(p=jnp.zeros((n,), jnp.float32), r=r0,
                      frontier=singleton(x, n, cap_f),
                      j=jnp.asarray(0, jnp.int32),
@@ -72,10 +73,10 @@ def hk_pr_alive(s: HKPRState) -> jnp.ndarray:
 
 
 def hk_pr_round(graph: CSRGraph, s: HKPRState, N: int, eps, t: float,
-                cap_e: int) -> HKPRState:
+                cap_e: int, backend: str = "xla") -> HKPRState:
     """One Taylor level (the while-loop body of Figure 5).  ``N`` and ``t``
     are trace-time constants: the ψ table is precomputed host-side in
-    float64."""
+    float64.  ``backend`` routes the scatters/scans (repro.core.ops)."""
     n = graph.n
     deg = graph.deg
     psi_table = jnp.asarray(psis(N, float(t)), jnp.float32)
@@ -89,19 +90,21 @@ def hk_pr_round(graph: CSRGraph, s: HKPRState, N: int, eps, t: float,
     dv = jnp.maximum(deg[safe], 1)
 
     # VERTEXMAP (UpdateSelf): p[v] += r[v]
-    p_new = scatter_add_dense(s.p, fids, rf, fvalid)
+    p_new = scatter_add_dense(s.p, fids, rf, fvalid, backend=backend)
 
-    eb = expand(graph, f, cap_e)
+    eb = expand(graph, f, cap_e, backend=backend)
     last = s.j + 1 >= N
 
     # last round (UpdateNghLast): p[w] += r[v]/d(v), then stop
     contrib_last = rf[eb.slot] / dv[eb.slot]
-    p_last = scatter_add_dense(p_new, eb.dst, contrib_last, eb.valid)
+    p_last = scatter_add_dense(p_new, eb.dst, contrib_last, eb.valid,
+                               backend=backend)
 
     # normal round (UpdateNgh): r'[w] += t·r[v]/((j+1)·d(v)); fresh r'
     contrib = (t * rf[eb.slot]) / ((s.j + 1.0) * dv[eb.slot])
     r_next = jnp.zeros_like(s.r)
-    r_next = scatter_add_dense(r_next, eb.dst, contrib, eb.valid)
+    r_next = scatter_add_dense(r_next, eb.dst, contrib, eb.valid,
+                               backend=backend)
 
     # frontier for level j+1: r'[v] ≥ eᵗ ε d(v) / (2N ψ_{j+1})
     thresh_coef = scale * eps / (2.0 * N * psi_table[jnp.minimum(s.j + 1, N)])
@@ -109,7 +112,7 @@ def hk_pr_round(graph: CSRGraph, s: HKPRState, N: int, eps, t: float,
     csafe = jnp.minimum(cands, n - 1)
     keep = eb.valid & (deg[csafe] > 0) & \
         (r_next[csafe] >= deg[csafe] * thresh_coef)
-    nf = pack_unique(cands, keep, n, s.frontier.cap)
+    nf = pack_unique(cands, keep, n, s.frontier.cap, backend=backend)
 
     return HKPRState(
         p=jnp.where(last, p_last, p_new),
@@ -123,14 +126,16 @@ def hk_pr_round(graph: CSRGraph, s: HKPRState, N: int, eps, t: float,
     )
 
 
-@functools.partial(jax.jit, static_argnums=(2, 4, 5, 6))
+@functools.partial(jax.jit, static_argnums=(2, 4, 5, 6),
+                   static_argnames=("N", "t", "cap_f", "cap_e", "backend"))
 def hk_pr_fixedcap(graph: CSRGraph, x, N: int, eps, t: float,
-                   cap_f: int, cap_e: int) -> HKPRResult:
+                   cap_f: int, cap_e: int, *,
+                   backend: str = "xla") -> HKPRResult:
     def cond(s: HKPRState):
         return hk_pr_alive(s)
 
     def body(s: HKPRState) -> HKPRState:
-        return hk_pr_round(graph, s, N, eps, t, cap_e)
+        return hk_pr_round(graph, s, N, eps, t, cap_e, backend)
 
     s = jax.lax.while_loop(cond, body, hk_pr_init(x, graph.n, cap_f))
     return HKPRResult(p=s.p, iterations=s.j, pushes=s.pushes,
@@ -139,10 +144,11 @@ def hk_pr_fixedcap(graph: CSRGraph, x, N: int, eps, t: float,
 
 def hk_pr(graph: CSRGraph, x, N: int = 20, eps: float = 1e-7, t: float = 10.0,
           cap_f: int = 1 << 12, cap_e: int = 1 << 16,
-          max_cap_e: int = 1 << 26) -> HKPRResult:
+          max_cap_e: int = 1 << 26, backend: str = "xla") -> HKPRResult:
     """Bucketed driver: retry with doubled capacities on overflow."""
     while True:
-        out = hk_pr_fixedcap(graph, x, N, eps, t, cap_f, cap_e)
+        out = hk_pr_fixedcap(graph, x, N, eps, t, cap_f, cap_e,
+                             backend=backend)
         if not bool(out.overflow) or cap_e >= max_cap_e:
             return out
         cap_f = min(cap_f * 2, graph.n + 1)

@@ -25,6 +25,7 @@ import numpy as np
 import jax.numpy as jnp
 
 from repro.graphs.csr import CSRGraph
+from . import ops as core_ops
 from .batched import batched_cluster, batched_cluster_fixedcap
 from .batched_sparse import batched_cluster_sparse
 
@@ -56,7 +57,8 @@ def ncp(graph: CSRGraph, num_seeds: int = 256,
         batch: int = 64, seed: int = 0,
         cap_f: int = 1 << 12, cap_e: int = 1 << 16,
         cap_n: int = 1 << 12, sweep_cap_e: int = 1 << 18,
-        backend: str = "dense", cap_v: int = 1 << 12) -> NCPResult:
+        backend: str = "dense", cap_v: int = 1 << 12,
+        ops_backend: str = "xla") -> NCPResult:
     """Host driver: grid of (seed, α, ε) runs through the batched engine
     (per-seed overflow retry included).
 
@@ -64,9 +66,15 @@ def ncp(graph: CSRGraph, num_seeds: int = 256,
     (:func:`repro.core.batched_sparse.batched_cluster_sparse`): per-lane
     memory O(cap_v) instead of O(n), sweep curves on the
     ``min(cap_n, cap_v)`` grid — the profile a billion-vertex NCP must use.
+
+    ``ops_backend`` ("xla" | "pallas" | "auto") is orthogonal to the lane
+    choice: it selects the kernel backend every scatter/merge/scan inside
+    either path dispatches through (:mod:`repro.core.ops`); profiles are
+    bit-identical across ops backends.
     """
     if backend not in ("dense", "sparse"):
         raise ValueError(f"unknown backend: {backend!r}")
+    ops_backend = core_ops.resolve(ops_backend)
     rng = np.random.default_rng(seed)
     deg = np.asarray(graph.deg)
     nonzero = np.flatnonzero(deg > 0)
@@ -87,11 +95,13 @@ def ncp(graph: CSRGraph, num_seeds: int = 256,
                 out = batched_cluster_sparse(graph, sb, eps, alpha,
                                              cap_f=cap_f, cap_e=cap_e,
                                              cap_v=cap_v,
-                                             sweep_cap_e=sweep_cap_e)
+                                             sweep_cap_e=sweep_cap_e,
+                                             backend=ops_backend)
             else:
                 out = batched_cluster(graph, sb, eps, alpha, cap_f=cap_f,
                                       cap_e=cap_e, cap_n=cap_n,
-                                      sweep_cap_e=sweep_cap_e)
+                                      sweep_cap_e=sweep_cap_e,
+                                      backend=ops_backend)
             ok = ~out.overflow
             curves = np.where(ok[:, None], out.conductance[:, :cap_n], np.inf)
             best = np.minimum(best, curves.min(axis=0))

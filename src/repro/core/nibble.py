@@ -19,7 +19,8 @@ import jax
 import jax.numpy as jnp
 
 from repro.graphs.csr import CSRGraph
-from .frontier import Frontier, expand, pack_unique, singleton, scatter_add_dense
+from .frontier import (Frontier, expand, pack_unique, singleton,
+                       scatter_add_dense, one_hot_f32)
 
 __all__ = ["NibbleResult", "nibble", "nibble_fixedcap"]
 
@@ -87,7 +88,7 @@ def nibble_fixedcap(graph: CSRGraph, x, eps, T,
             overflow=s.overflow | nf.overflow | eb.overflow,
         )
 
-    p0 = jnp.zeros((n,), jnp.float32).at[x].set(1.0)
+    p0 = one_hot_f32(x, n)
     s0 = _State(p=p0, frontier=singleton(x, n, cap_f),
                 t=jnp.asarray(0, jnp.int32), pushes=jnp.asarray(0, jnp.int32),
                 edge_work=jnp.asarray(0, jnp.int32), done=jnp.asarray(False),

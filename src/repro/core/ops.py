@@ -1,0 +1,223 @@
+"""Unified kernel-dispatch layer for the four hot primitives (``core.ops``).
+
+Every hot loop in the drivers bottoms out in one of four primitives — the
+paper's §3 vocabulary, restated as ops:
+
+  ============== ====================================== =====================
+  op             paper primitive                        Pallas kernel
+  ============== ====================================== =====================
+  scatter_add    atomic fetchAdd (batched)              kernels/scatter_accum
+  segment_merge  sparse-set batch insert (sort-merge)   kernels/segment_merge
+  diffusion_spmv saturated push round (A D⁻¹ p)         kernels/ell_spmv
+  prefix_sum     prefix sum (Blelloch scan)             kernels/prefix_scan
+  ============== ====================================== =====================
+
+This module is the single seam between the drivers (frontier / sparsevec /
+sweep / pr_nibble / batched / distributed / serving) and the kernels: a
+driver never names a kernel, it names an op and a *backend*.
+
+Backends
+--------
+``"xla"``
+    The reference: plain jnp/XLA scatter, sort + ``segment_sum``, gather
+    SpMV, ``jnp.cumsum`` — byte-for-byte the pre-op-layer driver code.
+``"pallas"``
+    The MXU kernels (interpret mode off-TPU, so the same code path is
+    exercised in CI on CPU).  Fold orders are preserved (stable sort +
+    in-order one-hot contraction + carried left folds), so ``scatter_add``
+    and ``segment_merge`` are *bit-identical* to ``xla`` in interpret mode,
+    and ``prefix_sum`` is bit-identical for the integer dtypes the drivers
+    scan (associativity is exact in int arithmetic).  ``diffusion_spmv``
+    reassociates the banded row reduction and is allclose, not bit-equal.
+``"auto"``
+    Resolves once at trace time: ``pallas`` on TPU, ``xla`` elsewhere.
+
+Two trace-time guards keep ``pallas`` exact and deployable at the capacity
+ladder's extremes: integer ``scatter_add`` stays on the XLA scatter (an f32
+MXU round-trip is only exact below 2²⁴ and ints gain nothing from the MXU),
+and ``segment_merge`` streams longer than ``_MERGE_PALLAS_MAX_STREAM`` fall
+back to the XLA merge (the fused kernel holds the stream in VMEM).  Both
+fallbacks are bit-identical by the invariant above, so they are pure
+performance decisions.
+
+Extending: :func:`register_backend` installs a new named implementation set
+(e.g. a sharded scatter, an HK-PR sparse-state merge) without touching any
+driver — they all take ``backend=`` and pass it here.
+"""
+from __future__ import annotations
+
+from typing import Callable, Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ops as kops
+from repro.kernels.segment_merge import segment_merge_sorted
+
+__all__ = ["OPS", "backends", "register_backend", "resolve",
+           "scatter_add", "segment_merge", "diffusion_spmv", "prefix_sum"]
+
+OPS = ("scatter_add", "segment_merge", "diffusion_spmv", "prefix_sum")
+
+_REGISTRY: Dict[str, Dict[str, Callable]] = {}
+
+
+def register_backend(name: str, **impls) -> None:
+    """Register implementations for (a subset of) :data:`OPS` under ``name``.
+
+    Missing ops fall back to the ``xla`` reference, so a backend can swap in
+    one kernel at a time."""
+    unknown = set(impls) - set(OPS)
+    if unknown:
+        raise ValueError(f"unknown ops {sorted(unknown)}; valid: {OPS}")
+    table = dict(_REGISTRY.get("xla", {}))
+    table.update(impls)
+    _REGISTRY[name] = table
+
+
+def backends() -> tuple:
+    return tuple(_REGISTRY)
+
+
+def resolve(backend: str) -> str:
+    """Concrete backend name for ``backend`` ("auto" → TPU? pallas : xla)."""
+    if backend is None or backend == "auto":
+        return "pallas" if kops.on_tpu() else "xla"
+    if backend not in _REGISTRY:
+        raise ValueError(
+            f"unknown ops backend {backend!r}; registered: {backends()}")
+    return backend
+
+
+def _impl(op: str, backend: str) -> Callable:
+    return _REGISTRY[resolve(backend)][op]
+
+
+# ------------------------------------------------------------------- the ops
+
+def scatter_add(vec, idx, vals, valid=None, *, backend: str = "xla"):
+    """Masked ``vec.at[idx].add(vals)`` — the batched fetchAdd.
+
+    ``valid`` masks both the index (dropped via the shared sentinel
+    ``vec.shape[0]``) and the value; ``None`` means all valid.  Any dtype;
+    the result keeps ``vec``'s dtype.  Backends agree bitwise (see module
+    docstring)."""
+    if valid is None:
+        valid = jnp.ones(idx.shape, bool)
+    return _impl("scatter_add", backend)(vec, idx, vals, valid)
+
+
+def segment_merge(ids, vals, n: int, cap: int, *, backend: str = "xla"):
+    """Sum duplicate ids of an unsorted stream; compact to ``cap`` slots.
+
+    ``ids`` int32[tot] with sentinel ``n`` marking dropped entries, ``vals``
+    f32[tot].  Returns ``(out_ids int32[cap], out_vals f32[cap],
+    count int32)`` — unique ids ascending, per-id totals folded in stream
+    order, sentinel/zero padded; ``count`` is uncapped so callers detect
+    overflow as ``count > cap``.  This is the body of
+    :func:`repro.core.sparsevec.sv_merge_add`."""
+    return _impl("segment_merge", backend)(ids, vals, n, cap)
+
+
+def diffusion_spmv(nbr, wgt, esc_src, esc_dst, esc_w, p, halo: int = 1, *,
+                   backend: str = "xla"):
+    """One saturated diffusion product y = coef·(A D⁻¹)p on the hybrid
+    banded-ELL + escaper-COO layout of :func:`repro.kernels.ops.pack_banded_ell`."""
+    return _impl("diffusion_spmv", backend)(nbr, wgt, esc_src, esc_dst,
+                                            esc_w, p, halo)
+
+
+def prefix_sum(x, *, backend: str = "xla"):
+    """Inclusive prefix sum, dtype preserved (int scans are exact on every
+    backend; f32 scans may reassociate on ``pallas``)."""
+    return _impl("prefix_sum", backend)(x)
+
+
+# ------------------------------------------------------------ xla (reference)
+
+def _scatter_add_xla(vec, idx, vals, valid):
+    safe = jnp.where(valid, idx, vec.shape[0])
+    return vec.at[safe].add(jnp.where(valid, vals, 0).astype(vec.dtype),
+                            mode="drop")
+
+
+def _segment_merge_xla(ids, vals, n, cap):
+    # sort → adjacent-duplicate groups → segment_sum → prefix-sum compaction:
+    # verbatim the pre-op-layer sv_merge_add body (the bit-identity reference)
+    tot = ids.shape[0]
+    order = jnp.argsort(ids)
+    ids_s = ids[order]
+    vals_s = vals[order]
+    first = jnp.concatenate([jnp.array([True]), ids_s[1:] != ids_s[:-1]])
+    group = jnp.cumsum(first) - 1
+    sums = jax.ops.segment_sum(vals_s, group, num_segments=tot)
+    sel = first & (ids_s < n)
+    pos = jnp.cumsum(sel) - 1
+    count = jnp.sum(sel).astype(jnp.int32)
+    out_ids = jnp.full((cap,), n, jnp.int32).at[
+        jnp.where(sel, pos, cap)].set(ids_s, mode="drop")
+    out_vals = jnp.zeros((cap,), jnp.float32).at[
+        jnp.where(sel, pos, cap)].set(sums[group], mode="drop")
+    return out_ids, out_vals, count
+
+
+def _diffusion_spmv_xla(nbr, wgt, esc_src, esc_dst, esc_w, p, halo):
+    n_pad = p.shape[0]
+    safe = jnp.clip(nbr, 0, n_pad - 1)
+    y = jnp.sum(jnp.where(nbr < n_pad, wgt * p[safe], 0.0), axis=1)
+    return y.at[esc_src].add(esc_w * p[esc_dst])
+
+
+def _prefix_sum_xla(x):
+    return jnp.cumsum(x)
+
+
+register_backend("xla",
+                 scatter_add=_scatter_add_xla,
+                 segment_merge=_segment_merge_xla,
+                 diffusion_spmv=_diffusion_spmv_xla,
+                 prefix_sum=_prefix_sum_xla)
+
+
+# ------------------------------------------------------------------- pallas
+
+_MERGE_PALLAS_MAX_STREAM = 1 << 20  # VMEM bound: the kernel holds the stream
+
+
+def _scatter_add_pallas(vec, idx, vals, valid):
+    if not jnp.issubdtype(vec.dtype, jnp.floating):
+        # integer scatters gain nothing from the MXU and would round-trip
+        # through f32 (exact only below 2^24, which the capacity-ladder
+        # extremes can exceed) — keep them on the always-exact XLA scatter
+        return _scatter_add_xla(vec, idx, vals, valid)
+    cap = vec.shape[0]
+    safe = jnp.where(valid, idx, cap).astype(jnp.int32)
+    masked = jnp.where(valid, vals, 0)
+    out = kops.scatter_fold_via_mxu(vec.astype(jnp.float32), safe,
+                                    masked.astype(jnp.float32))
+    return out.astype(vec.dtype)
+
+
+def _segment_merge_pallas(ids, vals, n, cap):
+    if ids.shape[0] > _MERGE_PALLAS_MAX_STREAM:
+        # the fused kernel keeps the whole stream in VMEM; ladder-extreme
+        # buckets (cap_e ≳ 2^20) stay on the xla merge (trace-time branch —
+        # shapes are static, so this costs nothing and results are
+        # bit-identical either way)
+        return _segment_merge_xla(ids, vals, n, cap)
+    order = jnp.argsort(ids)                 # same stable sort as xla
+    return segment_merge_sorted(ids[order].astype(jnp.int32),
+                                vals[order].astype(jnp.float32), n, cap,
+                                interpret=not kops.on_tpu())
+
+
+def _diffusion_spmv_pallas(nbr, wgt, esc_src, esc_dst, esc_w, p, halo):
+    return kops.diffusion_spmv(nbr, wgt, esc_src, esc_dst, esc_w, p,
+                               halo=halo)
+
+
+register_backend("pallas",
+                 scatter_add=_scatter_add_pallas,
+                 segment_merge=_segment_merge_pallas,
+                 diffusion_spmv=_diffusion_spmv_pallas,
+                 prefix_sum=kops.prefix_sum_exact)

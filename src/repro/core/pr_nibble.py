@@ -36,8 +36,8 @@ import jax
 import jax.numpy as jnp
 
 from repro.graphs.csr import CSRGraph
-from .frontier import (Frontier, expand, pack_unique, singleton,
-                       seed_set, scatter_add_dense)
+from .frontier import (Frontier, expand, pack_unique, singleton, seed_set,
+                       scatter_add_dense, scatter_set_dense, one_hot_f32)
 
 __all__ = ["PRNibbleResult", "PRNibbleState", "pr_nibble", "pr_nibble_fixedcap",
            "pr_nibble_init", "pr_nibble_round", "pr_nibble_alive", "MAX_ITERS"]
@@ -75,12 +75,12 @@ def pr_nibble_init(x, n: int, cap_f: int) -> PRNibbleState:
         seeds, count = x
         seeds = jnp.asarray(seeds, jnp.int32)
         valid = jnp.arange(seeds.shape[0]) < count
-        r0 = jnp.zeros((n,), jnp.float32).at[
-            jnp.where(valid, seeds, n)].add(
-            jnp.where(valid, 1.0 / count, 0.0), mode="drop")
+        r0 = scatter_add_dense(jnp.zeros((n,), jnp.float32), seeds,
+                               jnp.full(seeds.shape, 1.0 / count, jnp.float32),
+                               valid)
         front0 = seed_set(seeds, count, n, cap_f)
     else:
-        r0 = jnp.zeros((n,), jnp.float32).at[x].set(1.0)
+        r0 = one_hot_f32(x, n)
         front0 = singleton(x, n, cap_f)
     return PRNibbleState(p=jnp.zeros((n,), jnp.float32), r=r0,
                          frontier=front0,
@@ -97,8 +97,12 @@ def pr_nibble_alive(s: PRNibbleState, max_iters: int = MAX_ITERS) -> jnp.ndarray
 
 def pr_nibble_round(graph: CSRGraph, s: PRNibbleState, eps, alpha,
                     optimized: bool, cap_e: int,
-                    beta: float = 1.0) -> PRNibbleState:
-    """One synchronous push round (the while-loop body of Figures 3–4)."""
+                    beta: float = 1.0, backend: str = "xla") -> PRNibbleState:
+    """One synchronous push round (the while-loop body of Figures 3–4).
+
+    ``backend`` selects the kernel backend for every scatter/scan in the
+    round (see :mod:`repro.core.ops`); results are bit-identical across
+    backends (interpret mode off-TPU)."""
     n = graph.n
     deg = graph.deg
     f = s.frontier
@@ -117,7 +121,7 @@ def pr_nibble_round(graph: CSRGraph, s: PRNibbleState, eps, alpha,
         sel = fvalid & (r_over_d >= kth)
         # re-pack: Frontier validity is prefix-based, so the selected ids
         # must be compacted to the front
-        f = pack_unique(fids, sel, n, f.cap)
+        f = pack_unique(fids, sel, n, f.cap, backend=backend)
         fvalid = f.valid()
         fids = jnp.where(fvalid, f.ids, n)
         safe = jnp.minimum(fids, n - 1)
@@ -134,20 +138,20 @@ def pr_nibble_round(graph: CSRGraph, s: PRNibbleState, eps, alpha,
         r_self = (1.0 - alpha) * rf / 2.0
         share = (1.0 - alpha) * rf / (2.0 * dv)
 
-    p_new = scatter_add_dense(s.p, fids, p_gain, fvalid)
+    p_new = scatter_add_dense(s.p, fids, p_gain, fvalid, backend=backend)
     # r' starts as r with frontier entries replaced (double buffer)
-    r_new = s.r.at[jnp.where(fvalid, fids, n)].set(
-        jnp.where(fvalid, r_self, 0.0), mode="drop")
+    r_new = scatter_set_dense(s.r, fids, r_self, fvalid)
 
-    eb = expand(graph, f, cap_e)
+    eb = expand(graph, f, cap_e, backend=backend)
     contrib = share[eb.slot]
-    r_new = scatter_add_dense(r_new, eb.dst, contrib, eb.valid)
+    r_new = scatter_add_dense(r_new, eb.dst, contrib, eb.valid,
+                              backend=backend)
 
     cands = jnp.concatenate([all_fids, eb.dst])
     cvalid = jnp.concatenate([all_fvalid, eb.valid])
     csafe = jnp.minimum(cands, n - 1)
     keep = cvalid & (deg[csafe] > 0) & (r_new[csafe] >= deg[csafe] * eps)
-    nf = pack_unique(cands, keep, n, s.frontier.cap)
+    nf = pack_unique(cands, keep, n, s.frontier.cap, backend=backend)
 
     return PRNibbleState(p=p_new, r=r_new, frontier=nf, t=s.t + 1,
                          pushes=s.pushes + f.count,
@@ -155,15 +159,19 @@ def pr_nibble_round(graph: CSRGraph, s: PRNibbleState, eps, alpha,
                          overflow=s.overflow | nf.overflow | eb.overflow)
 
 
-@functools.partial(jax.jit, static_argnums=(4, 5, 6, 7, 8))
+@functools.partial(jax.jit, static_argnums=(4, 5, 6, 7, 8),
+                   static_argnames=("optimized", "cap_f", "cap_e",
+                                    "max_iters", "beta", "backend"))
 def pr_nibble_fixedcap(graph: CSRGraph, x, eps, alpha,
                        optimized: bool, cap_f: int, cap_e: int,
-                       max_iters: int = MAX_ITERS, beta: float = 1.0) -> PRNibbleResult:
+                       max_iters: int = MAX_ITERS, beta: float = 1.0, *,
+                       backend: str = "xla") -> PRNibbleResult:
     def cond(s: PRNibbleState):
         return pr_nibble_alive(s, max_iters)
 
     def body(s: PRNibbleState) -> PRNibbleState:
-        return pr_nibble_round(graph, s, eps, alpha, optimized, cap_e, beta)
+        return pr_nibble_round(graph, s, eps, alpha, optimized, cap_e, beta,
+                               backend)
 
     s = jax.lax.while_loop(cond, body, pr_nibble_init(x, graph.n, cap_f))
     return PRNibbleResult(p=s.p, r=s.r, iterations=s.t, pushes=s.pushes,
@@ -172,11 +180,12 @@ def pr_nibble_fixedcap(graph: CSRGraph, x, eps, alpha,
 
 def pr_nibble(graph: CSRGraph, x, eps: float = 1e-7, alpha: float = 0.01,
               optimized: bool = True, cap_f: int = 1 << 12, cap_e: int = 1 << 16,
-              max_cap_e: int = 1 << 26, beta: float = 1.0) -> PRNibbleResult:
+              max_cap_e: int = 1 << 26, beta: float = 1.0,
+              backend: str = "xla") -> PRNibbleResult:
     """Bucketed driver: retry with doubled capacities on overflow."""
     while True:
         out = pr_nibble_fixedcap(graph, x, eps, alpha, optimized, cap_f, cap_e,
-                                 beta=beta)
+                                 beta=beta, backend=backend)
         if not bool(out.overflow) or cap_e >= max_cap_e:
             return out
         cap_f = min(cap_f * 2, graph.n + 1)

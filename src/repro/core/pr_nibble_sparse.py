@@ -82,8 +82,14 @@ def pr_nibble_sparse_alive(s: PRNibbleSparseState,
 
 
 def pr_nibble_sparse_round(graph: CSRGraph, s: PRNibbleSparseState, eps, alpha,
-                           optimized: bool, cap_e: int) -> PRNibbleSparseState:
-    """One synchronous push round over the sparse state (Figures 3–4)."""
+                           optimized: bool, cap_e: int,
+                           backend: str = "xla") -> PRNibbleSparseState:
+    """One synchronous push round over the sparse state (Figures 3–4).
+
+    ``backend`` routes both ``sv_merge_add`` reductions (the round's hot
+    loop) plus the expand/pack scans through :mod:`repro.core.ops` —
+    ``"pallas"`` runs them on the fused segment-merge kernel with
+    bit-identical results (interpret mode off-TPU)."""
     n = graph.n
     deg = graph.deg
     f = s.frontier
@@ -102,17 +108,18 @@ def pr_nibble_sparse_round(graph: CSRGraph, s: PRNibbleSparseState, eps, alpha,
         r_self = (1.0 - alpha) * rf / 2.0
         share = (1.0 - alpha) * rf / (2.0 * dv)
 
-    p_new = sv_merge_add(s.p, fids, p_gain, fvalid, n)
+    p_new = sv_merge_add(s.p, fids, p_gain, fvalid, n, backend=backend)
     r_new = sv_update_existing(s.r, fids, r_self, fvalid)
-    eb = expand(graph, f, cap_e)
-    r_new = sv_merge_add(r_new, eb.dst, share[eb.slot], eb.valid, n)
+    eb = expand(graph, f, cap_e, backend=backend)
+    r_new = sv_merge_add(r_new, eb.dst, share[eb.slot], eb.valid, n,
+                         backend=backend)
 
     cands = jnp.concatenate([fids, eb.dst])
     cvalid = jnp.concatenate([fvalid, eb.valid])
     csafe = jnp.minimum(cands, n - 1)
     r_cand = sv_lookup(r_new, cands, n)
     keep = cvalid & (deg[csafe] > 0) & (r_cand >= deg[csafe] * eps)
-    nf = pack_unique(cands, keep, n, f.cap)
+    nf = pack_unique(cands, keep, n, f.cap, backend=backend)
 
     return PRNibbleSparseState(p=p_new, r=r_new, frontier=nf, t=s.t + 1,
                                pushes=s.pushes + f.count,
@@ -121,16 +128,19 @@ def pr_nibble_sparse_round(graph: CSRGraph, s: PRNibbleSparseState, eps, alpha,
                                          r_new.overflow))
 
 
-@functools.partial(jax.jit, static_argnums=(4, 5, 6, 7, 8))
+@functools.partial(jax.jit, static_argnums=(4, 5, 6, 7, 8),
+                   static_argnames=("optimized", "cap_f", "cap_e", "cap_v",
+                                    "max_iters", "backend"))
 def pr_nibble_sparse_fixedcap(graph: CSRGraph, x, eps, alpha,
                               optimized: bool, cap_f: int, cap_e: int,
-                              cap_v: int, max_iters: int = 10_000
-                              ) -> PRNibbleSparseResult:
+                              cap_v: int, max_iters: int = 10_000, *,
+                              backend: str = "xla") -> PRNibbleSparseResult:
     def cond(s: PRNibbleSparseState):
         return pr_nibble_sparse_alive(s, max_iters)
 
     def body(s: PRNibbleSparseState) -> PRNibbleSparseState:
-        return pr_nibble_sparse_round(graph, s, eps, alpha, optimized, cap_e)
+        return pr_nibble_sparse_round(graph, s, eps, alpha, optimized, cap_e,
+                                      backend)
 
     s = jax.lax.while_loop(cond, body,
                            pr_nibble_sparse_init(x, graph.n, cap_f, cap_v))
@@ -141,7 +151,8 @@ def pr_nibble_sparse_fixedcap(graph: CSRGraph, x, eps, alpha,
 def pr_nibble_sparse(graph: CSRGraph, x, eps: float = 1e-7, alpha: float = 0.01,
                      optimized: bool = True, cap_f: int = 1 << 10,
                      cap_e: int = 1 << 14, cap_v: int = 1 << 12,
-                     max_cap_e: int = 1 << 26) -> PRNibbleSparseResult:
+                     max_cap_e: int = 1 << 26,
+                     backend: str = "xla") -> PRNibbleSparseResult:
     """Bucketed driver: retry with doubled capacities on overflow.
 
     The doubling schedule (cap_f, cap_v clamped to n+1; cap_e unclamped up to
@@ -151,7 +162,7 @@ def pr_nibble_sparse(graph: CSRGraph, x, eps: float = 1e-7, alpha: float = 0.01,
     """
     while True:
         out = pr_nibble_sparse_fixedcap(graph, x, eps, alpha, optimized,
-                                        cap_f, cap_e, cap_v)
+                                        cap_f, cap_e, cap_v, backend=backend)
         if not bool(out.overflow) or cap_e >= max_cap_e:
             return out
         cap_f = min(cap_f * 2, graph.n + 1)

@@ -22,6 +22,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.graphs.csr import CSRGraph
+from .frontier import scatter_set_dense
 
 __all__ = ["RandHKPRResult", "rand_hk_pr", "poisson_cdf_table"]
 
@@ -79,13 +80,14 @@ def rand_hk_pr(graph: CSRGraph, x, num_walks: int, K: int, t: float,
     first = jnp.concatenate([jnp.array([True]), a[1:] != a[:-1]])
     nnz = jnp.sum(first).astype(jnp.int32)
     pos = jnp.cumsum(first) - 1                       # output slot per group
-    ids = jnp.full((num_walks,), n, dtype=jnp.int32)
-    ids = ids.at[jnp.where(first, pos, num_walks)].set(a, mode="drop")
+    ids = scatter_set_dense(jnp.full((num_walks,), n, dtype=jnp.int32),
+                            pos, a, first)
     # counts via difference of group start offsets
     offsets = jnp.full((num_walks + 1,), num_walks, dtype=jnp.int32)
-    offsets = offsets.at[jnp.where(first, pos, num_walks + 1)].set(
-        jnp.arange(num_walks, dtype=jnp.int32), mode="drop")
-    offsets = offsets.at[jnp.minimum(nnz, num_walks)].set(num_walks)
+    offsets = scatter_set_dense(offsets, pos,
+                                jnp.arange(num_walks, dtype=jnp.int32), first)
+    offsets = scatter_set_dense(offsets, jnp.minimum(nnz, num_walks),
+                                num_walks, True)
     counts = offsets[1:] - offsets[:-1]
     valid = jnp.arange(num_walks) < nnz
     vals = jnp.where(valid, counts, 0).astype(jnp.float32) / num_walks

@@ -14,6 +14,11 @@ primitive — so a sparse set here is a sorted, sentinel-padded
 
 Capacity is static per jit bucket; exceeding it raises the overflow flag and
 the driver retries one bucket up (see frontier.py).
+
+The merge-add reduction itself (sort → sum-duplicates → compact) is an op:
+it dispatches through :func:`repro.core.ops.segment_merge`, so ``backend=
+"pallas"`` fuses the post-sort pipeline into the MXU segment-merge kernel
+(kernels/segment_merge.py) with bit-identical results to the XLA reference.
 """
 from __future__ import annotations
 
@@ -21,6 +26,9 @@ from typing import NamedTuple
 
 import jax
 import jax.numpy as jnp
+
+from . import ops
+from .frontier import scatter_set_dense
 
 __all__ = ["SparseVec", "sv_empty", "sv_lookup", "sv_merge_add",
            "sv_update_existing", "sv_from_pairs"]
@@ -47,9 +55,11 @@ def sv_empty(cap: int, n: int) -> SparseVec:
                      overflow=jnp.asarray(False))
 
 
-def sv_from_pairs(ids, vals, valid, cap: int, n: int) -> SparseVec:
+def sv_from_pairs(ids, vals, valid, cap: int, n: int,
+                  backend: str = "xla") -> SparseVec:
     """Build from (possibly duplicated / unsorted) pairs: duplicates summed."""
-    return sv_merge_add(sv_empty(cap, n), ids, vals, valid, n)
+    return sv_merge_add(sv_empty(cap, n), ids, vals, valid, n,
+                        backend=backend)
 
 
 def sv_lookup(sv: SparseVec, queries: jnp.ndarray, n: int) -> jnp.ndarray:
@@ -64,39 +74,26 @@ def sv_update_existing(sv: SparseVec, ids, new_vals, valid) -> SparseVec:
     """Overwrite values of keys already present (no structural change)."""
     pos = jnp.clip(jnp.searchsorted(sv.ids, ids), 0, sv.cap - 1)
     hit = valid & (sv.ids[pos] == ids)
-    vals = sv.vals.at[jnp.where(hit, pos, sv.cap)].set(
-        jnp.where(hit, new_vals, 0.0), mode="drop")
-    return sv._replace(vals=vals)
+    return sv._replace(vals=scatter_set_dense(sv.vals, pos, new_vals, hit))
 
 
-def sv_merge_add(sv: SparseVec, upd_ids, upd_vals, upd_valid, n: int) -> SparseVec:
+def sv_merge_add(sv: SparseVec, upd_ids, upd_vals, upd_valid, n: int,
+                 backend: str = "xla") -> SparseVec:
     """`r[w] += delta` for a batch of updates — the fetchAdd batch.
 
-    Concatenate the live entries with the updates, sort by id, sum adjacent
-    duplicates (segment-sum over cumsum-group ids), compact back to `cap`.
+    Concatenate the live entries with the updates, then one
+    :func:`repro.core.ops.segment_merge`: sort by id, sum adjacent duplicates,
+    compact back to `cap`.
     """
     cap = sv.cap
-    u = upd_ids.shape[0]
-    tot = cap + u
     ids_all = jnp.concatenate([
         jnp.where(sv.valid(), sv.ids, n),
         jnp.where(upd_valid, upd_ids, n).astype(jnp.int32)])
     vals_all = jnp.concatenate([
         jnp.where(sv.valid(), sv.vals, 0.0),
         jnp.where(upd_valid, upd_vals, 0.0)])
-    order = jnp.argsort(ids_all)
-    ids_s = ids_all[order]
-    vals_s = vals_all[order]
-    first = jnp.concatenate([jnp.array([True]), ids_s[1:] != ids_s[:-1]])
-    group = jnp.cumsum(first) - 1                      # group id per slot
-    sums = jax.ops.segment_sum(vals_s, group, num_segments=tot)
-    sel = first & (ids_s < n)
-    pos = jnp.cumsum(sel) - 1
-    new_count = jnp.sum(sel).astype(jnp.int32)
-    out_ids = jnp.full((cap,), n, jnp.int32).at[
-        jnp.where(sel, pos, cap)].set(ids_s, mode="drop")
-    out_vals = jnp.zeros((cap,), jnp.float32).at[
-        jnp.where(sel, pos, cap)].set(sums[group], mode="drop")
+    out_ids, out_vals, new_count = ops.segment_merge(ids_all, vals_all, n,
+                                                     cap, backend=backend)
     return SparseVec(ids=out_ids, vals=out_vals,
                      count=jnp.minimum(new_count, cap),
                      overflow=sv.overflow | (new_count > cap))

@@ -31,11 +31,25 @@ import jax
 import jax.numpy as jnp
 
 from repro.graphs.csr import CSRGraph
-from .frontier import Frontier, expand
+from . import ops
+from .frontier import Frontier, expand, scatter_set_dense
 
 __all__ = ["SweepResult", "sweep_cut", "sweep_cut_dense", "sweep_cut_sparse"]
 
 _INF = jnp.float32(jnp.inf)
+
+
+def _boundary_cut(r_src, r_dst, go, cap_n: int, backend: str) -> jnp.ndarray:
+    """∂(S_j) for every prefix j via the difference array (module docstring):
+    +1 at rank(v)+1, −1 at rank(w)+1 for each crossing edge, then an
+    inclusive prefix sum.  Shared by the dense and sparse sweeps; both
+    scatters and the scan dispatch through :mod:`repro.core.ops` (int32 —
+    exact on every backend)."""
+    ones = jnp.ones(r_src.shape, jnp.int32)
+    diff = jnp.zeros((cap_n + 2,), dtype=jnp.int32)
+    diff = ops.scatter_add(diff, r_src + 1, ones, go, backend=backend)
+    diff = ops.scatter_add(diff, r_dst + 1, -ones, go, backend=backend)
+    return ops.prefix_sum(diff, backend=backend)[1: cap_n + 1]
 
 
 class SweepResult(NamedTuple):
@@ -55,9 +69,11 @@ class SweepResult(NamedTuple):
         return jnp.where(keep, self.order, jnp.iinfo(jnp.int32).max)
 
 
-@functools.partial(jax.jit, static_argnums=(4,))
+@functools.partial(jax.jit, static_argnums=(4,),
+                   static_argnames=("cap_e", "backend"))
 def sweep_cut(graph: CSRGraph, ids: jnp.ndarray, vals: jnp.ndarray,
-              nnz: jnp.ndarray, cap_e: int) -> SweepResult:
+              nnz: jnp.ndarray, cap_e: int, *,
+              backend: str = "xla") -> SweepResult:
     """Sweep over a sparse diffusion vector.
 
     Args:
@@ -67,6 +83,7 @@ def sweep_cut(graph: CSRGraph, ids: jnp.ndarray, vals: jnp.ndarray,
       vals: f32[cap_n]   diffusion mass for each id
       nnz:  int32 scalar — number of valid (id, val) pairs
       cap_e: static edge-workspace capacity (≥ vol(S_N))
+      backend: kernel backend for the scatters/scans (repro.core.ops)
     """
     n, m = graph.n, graph.m
     cap_n = ids.shape[0]
@@ -87,23 +104,19 @@ def sweep_cut(graph: CSRGraph, ids: jnp.ndarray, vals: jnp.ndarray,
     # rank table (the paper's `rank` sparse set → dense O(n) table; the
     # *work* to build it is O(N))
     rank = jnp.full((n + 1,), cap_n, dtype=jnp.int32)
-    rank = rank.at[jnp.where(valid_s, order, n)].set(
-        jnp.where(valid_s, arange_n, cap_n), mode="drop")
+    rank = scatter_set_dense(rank, order, arange_n, valid_s)
 
     # expand all edges of S_N (degree prefix-sum + searchsorted)
     front = Frontier(ids=jnp.where(valid_s, order, n), count=nnz_eff,
                      overflow=jnp.asarray(False))
-    eb = expand(graph, front, cap_e)
+    eb = expand(graph, front, cap_e, backend=backend)
 
     r_src = eb.slot                                   # rank of src == slot
     r_dst = jnp.minimum(rank[jnp.minimum(eb.dst, n)], nnz_eff)  # outside → N
     go = eb.valid & (r_src < r_dst)
-    diff = jnp.zeros((cap_n + 2,), dtype=jnp.int32)
-    diff = diff.at[jnp.where(go, r_src + 1, cap_n + 1)].add(1, mode="drop")
-    diff = diff.at[jnp.where(go, r_dst + 1, cap_n + 1)].add(-1, mode="drop")
-    cut = jnp.cumsum(diff)[1: cap_n + 1]              # ∂(S_j), j = 1..cap_n
+    cut = _boundary_cut(r_src, r_dst, go, cap_n, backend)  # ∂(S_j), j=1..cap_n
 
-    vol = jnp.cumsum(deg_s)                           # vol(S_j)
+    vol = ops.prefix_sum(deg_s, backend=backend)      # vol(S_j)
     denom = jnp.minimum(vol, 2 * m - vol)
     prefix_ok = valid_s & (denom > 0)
     cond = jnp.where(prefix_ok, cut / jnp.maximum(denom, 1), _INF)
@@ -122,9 +135,11 @@ def sweep_cut(graph: CSRGraph, ids: jnp.ndarray, vals: jnp.ndarray,
     )
 
 
-@functools.partial(jax.jit, static_argnums=(4,))
+@functools.partial(jax.jit, static_argnums=(4,),
+                   static_argnames=("cap_e", "backend"))
 def sweep_cut_sparse(graph: CSRGraph, ids: jnp.ndarray, vals: jnp.ndarray,
-                     nnz: jnp.ndarray, cap_e: int) -> SweepResult:
+                     nnz: jnp.ndarray, cap_e: int, *,
+                     backend: str = "xla") -> SweepResult:
     """Sweep over a sparse diffusion vector *without* the O(n) rank table.
 
     Mathematically identical to :func:`sweep_cut` — same ordering, same
@@ -168,19 +183,16 @@ def sweep_cut_sparse(graph: CSRGraph, ids: jnp.ndarray, vals: jnp.ndarray,
     rnk_s = rnk[asc]
 
     front = Frontier(ids=sid, count=nnz_eff, overflow=jnp.asarray(False))
-    eb = expand(graph, front, cap_e)
+    eb = expand(graph, front, cap_e, backend=backend)
 
     pos = jnp.clip(jnp.searchsorted(sid_s, eb.dst), 0, cap_n - 1)
     hit = (sid_s[pos] == eb.dst) & (eb.dst < n)
     r_src = eb.slot
     r_dst = jnp.minimum(jnp.where(hit, rnk_s[pos], cap_n), nnz_eff)
     go = eb.valid & (r_src < r_dst)
-    diff = jnp.zeros((cap_n + 2,), dtype=jnp.int32)
-    diff = diff.at[jnp.where(go, r_src + 1, cap_n + 1)].add(1, mode="drop")
-    diff = diff.at[jnp.where(go, r_dst + 1, cap_n + 1)].add(-1, mode="drop")
-    cut = jnp.cumsum(diff)[1: cap_n + 1]
+    cut = _boundary_cut(r_src, r_dst, go, cap_n, backend)
 
-    vol = jnp.cumsum(deg_s)
+    vol = ops.prefix_sum(deg_s, backend=backend)
     denom = jnp.minimum(vol, 2 * m - vol)
     prefix_ok = valid_s & (denom > 0)
     cond = jnp.where(prefix_ok, cut / jnp.maximum(denom, 1), _INF)
@@ -200,7 +212,7 @@ def sweep_cut_sparse(graph: CSRGraph, ids: jnp.ndarray, vals: jnp.ndarray,
 
 
 def sweep_cut_dense(graph: CSRGraph, p: jnp.ndarray, cap_n: int,
-                    cap_e: int) -> SweepResult:
+                    cap_e: int, backend: str = "xla") -> SweepResult:
     """Sweep over a dense diffusion vector: extract the top-``cap_n`` support
     first (sorted extraction = the paper's non-zero gather)."""
     n = graph.n
@@ -212,5 +224,5 @@ def sweep_cut_dense(graph: CSRGraph, p: jnp.ndarray, cap_n: int,
     idx = jax.lax.top_k(score, cap_n)[1].astype(jnp.int32)
     vals = p[idx]
     count = jnp.minimum(nnz, cap_n)
-    res = sweep_cut(graph, idx, vals, count, cap_e)
+    res = sweep_cut(graph, idx, vals, count, cap_e, backend=backend)
     return res._replace(overflow=res.overflow | (nnz > cap_n))

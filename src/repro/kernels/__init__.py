@@ -3,14 +3,18 @@
   ell_spmv      — banded ELL SpMV (saturated diffusion round), one-hot MXU gather
   scatter_accum — sort-bucketed scatter-add (fetchAdd → systolic contraction)
   prefix_scan   — two-phase blocked prefix sum (sweep-cut backbone)
+  segment_merge — fused sorted-segment merge (sv_merge_add's post-sort pass)
 
 ``ops`` holds the jit'd layout wrappers, ``ref`` the pure-jnp oracles.
-Kernels compile for TPU; on CPU they run under ``interpret=True``.
+Kernels compile for TPU; on CPU they run under ``interpret=True``.  Drivers
+never import these directly — they dispatch through :mod:`repro.core.ops`.
 """
 from . import ops, ref
 from .ell_spmv import band_spmv, ROW_BLOCK
 from .scatter_accum import scatter_accum_tiles, TILE
 from .prefix_scan import block_scan, BLOCK
+from .segment_merge import segment_merge_sorted, segment_merge_stream, BLK
 
 __all__ = ["ops", "ref", "band_spmv", "ROW_BLOCK", "scatter_accum_tiles",
-           "TILE", "block_scan", "BLOCK"]
+           "TILE", "block_scan", "BLOCK", "segment_merge_sorted",
+           "segment_merge_stream", "BLK"]

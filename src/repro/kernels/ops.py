@@ -17,7 +17,8 @@ from .ell_spmv import band_spmv, ROW_BLOCK
 from .scatter_accum import scatter_accum_tiles, TILE
 from .prefix_scan import block_scan, BLOCK
 
-__all__ = ["on_tpu", "diffusion_spmv", "scatter_add_via_mxu", "prefix_sum",
+__all__ = ["on_tpu", "diffusion_spmv", "scatter_add_via_mxu",
+           "scatter_fold_via_mxu", "prefix_sum", "prefix_sum_exact",
            "pack_banded_ell"]
 
 
@@ -115,9 +116,72 @@ def scatter_add_via_mxu(vec: jnp.ndarray, idx: jnp.ndarray, vals: jnp.ndarray,
     return out
 
 
+def scatter_fold_via_mxu(vec: jnp.ndarray, idx: jnp.ndarray,
+                         vals: jnp.ndarray, chunk: int = 256) -> jnp.ndarray:
+    """Update-order-preserving scatter-add through the MXU kernel.
+
+    Same sort-bucket-matmul pipeline as :func:`scatter_add_via_mxu`, but each
+    128-wide destination tile's *existing* ``vec`` values are prepended as the
+    tile's first 128 (identity-offset) contributions, so every output element
+    is the left fold ``((vec[i] + v_1) + v_2) + …`` with the contributions in
+    their original submission order (the stable sort preserves it) — exactly
+    the combine order of ``vec.at[idx].add(vals)``.  This is the bit-exact
+    variant :mod:`repro.core.ops` routes drivers through; the plain
+    ``vec + tiles`` variant above keeps the cheaper layout for callers that
+    only need allclose.
+
+    Per-tile overflow (more than ``chunk`` contributions on one tile) spills
+    to an XLA scatter *after* the tile fold — those are the latest-sorted
+    contributions per destination, so fold order is still preserved.
+    """
+    n = vec.shape[0]
+    m = idx.shape[0]
+    n_pad = -(-n // TILE) * TILE
+    T = n_pad // TILE
+    C = TILE + chunk
+    order = jnp.argsort(idx)               # stable: preserves submission order
+    idx_s = idx[order]
+    vals_s = vals[order]
+    tile_id = jnp.clip(idx_s // TILE, 0, T - 1)
+    first_pos = jnp.searchsorted(tile_id, jnp.arange(T), side="left")
+    rank = jnp.arange(m) - first_pos[tile_id]
+    ok = (idx_s >= 0) & (idx_s < n) & (rank < chunk)
+    # identity block: slot j < TILE of tile t carries vec[t*TILE + j]
+    local = jnp.broadcast_to(
+        jnp.concatenate([jnp.arange(TILE, dtype=jnp.int32),
+                         jnp.full((chunk,), -1, jnp.int32)]), (T, C))
+    v = jnp.concatenate(
+        [jnp.pad(vec.astype(jnp.float32), (0, n_pad - n)).reshape(T, TILE),
+         jnp.zeros((T, chunk), jnp.float32)], axis=1)
+    flat = tile_id * C + TILE + rank
+    local = local.reshape(-1).at[jnp.where(ok, flat, T * C)].set(
+        (idx_s % TILE).astype(jnp.int32), mode="drop").reshape(T, C)
+    v = v.reshape(-1).at[jnp.where(ok, flat, T * C)].set(
+        vals_s.astype(jnp.float32), mode="drop").reshape(T, C)
+    tiles = scatter_accum_tiles(local, v, interpret=_interp())
+    out = tiles.reshape(-1)[:n]
+    spill = (~ok) & (idx_s >= 0) & (idx_s < n)
+    out = out.at[jnp.where(spill, idx_s, n)].add(
+        jnp.where(spill, vals_s.astype(jnp.float32), 0.0), mode="drop")
+    return out
+
+
 def prefix_sum(x: jnp.ndarray) -> jnp.ndarray:
     """Inclusive prefix sum via the blocked Pallas scan (auto-padded)."""
     n = x.shape[0]
     n_pad = -(-n // BLOCK) * BLOCK
     xp = jnp.pad(x.astype(jnp.float32), (0, n_pad - n))
+    return block_scan(xp, interpret=_interp())[:n]
+
+
+def prefix_sum_exact(x: jnp.ndarray) -> jnp.ndarray:
+    """Dtype-preserving inclusive prefix sum via the blocked Pallas scan.
+
+    Unlike :func:`prefix_sum` there is no f32 cast: integer inputs scan in
+    integer arithmetic, so the result is bit-identical to ``jnp.cumsum``
+    regardless of the block association (the op layer's exactness contract
+    for the drivers' int32 scans)."""
+    n = x.shape[0]
+    n_pad = -(-n // BLOCK) * BLOCK
+    xp = jnp.pad(x, (0, n_pad - n))
     return block_scan(xp, interpret=_interp())[:n]

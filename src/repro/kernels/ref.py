@@ -9,7 +9,7 @@ from __future__ import annotations
 import jax.numpy as jnp
 
 __all__ = ["band_spmv_ref", "scatter_accum_ref", "block_scan_ref",
-           "spmv_csr_ref"]
+           "spmv_csr_ref", "scatter_add_ref", "segment_merge_ref"]
 
 
 def band_spmv_ref(nbr: jnp.ndarray, weights: jnp.ndarray,
@@ -35,6 +35,42 @@ def scatter_accum_ref(local: jnp.ndarray, vals: jnp.ndarray,
 
 def block_scan_ref(x: jnp.ndarray) -> jnp.ndarray:
     return jnp.cumsum(x)
+
+
+def scatter_add_ref(vec, idx, vals, valid):
+    """Masked scatter-add oracle for :func:`repro.core.ops.scatter_add`,
+    structure-free: a host-side numpy left fold over the updates in
+    submission order — the exact combine order both backends must
+    reproduce, computed without any scatter/sort machinery.  Test-only
+    (eager numpy, not jit-able)."""
+    import numpy as np
+    out = np.asarray(vec).copy()
+    idx = np.asarray(idx)
+    vals = np.asarray(vals).astype(out.dtype)
+    valid = np.asarray(valid)
+    for j in range(idx.shape[0]):
+        if valid[j] and 0 <= idx[j] < out.shape[0]:
+            out[idx[j]] += vals[j]
+    return out
+
+
+def segment_merge_ref(ids, vals, n: int, cap: int):
+    """Duplicate-summing merge oracle for
+    :func:`repro.core.ops.segment_merge`: a dense scatter-accumulate over the
+    full id range followed by a top-``cap`` extraction of the support —
+    no sorting pipeline at all, so it shares no structure with either
+    backend implementation."""
+    dense = jnp.zeros((n + 1,), jnp.float32).at[
+        jnp.clip(ids, 0, n)].add(jnp.where(ids < n, vals, 0.0))
+    hit = jnp.zeros((n + 1,), bool).at[jnp.clip(ids, 0, n)].set(ids < n)
+    present = hit[:n]
+    count = jnp.sum(present).astype(jnp.int32)
+    pos = jnp.cumsum(present) - 1
+    out_ids = jnp.full((cap,), n, jnp.int32).at[
+        jnp.where(present, pos, cap)].set(jnp.arange(n), mode="drop")
+    out_vals = jnp.zeros((cap,), jnp.float32).at[
+        jnp.where(present, pos, cap)].set(dense[:n], mode="drop")
+    return out_ids, out_vals, count
 
 
 def spmv_csr_ref(indptr, indices, deg, p, coef: float = 0.5):

@@ -32,12 +32,20 @@ materializes a dense vector anywhere on its path.  ``backend="auto"``
 ``ClusterRequest.backend``.  The sparse state exists only for plain
 PR-Nibble (β = 1): HK-PR or β-selection requests always serve dense.
 
+Orthogonal to the lane type is the *kernel* backend
+(``ops_backend="xla" | "pallas" | "auto"``, engine-wide or per request via
+``ClusterRequest.ops_backend``): which implementation every scatter/merge/
+scan inside the rounds dispatches to (:mod:`repro.core.ops`).  Results are
+bit-identical across kernel backends, so the scheduler may serve a mixed
+stream from differently-backed pools without changing any answer.
+
 Capacity-ladder / retry contract: buckets follow the single-seed drivers'
 doubling schedule (cap_f, cap_v clamped at n+1; cap_e unclamped to
 ``max_cap_e``; sweep caps likewise), so a request promoted b buckets up
 computes bit-identically to the single-seed driver retrying b times.
-Recompile boundary: (method, backend, statics, batch_slots, bucket) — all
-dynamic knobs (seed, α, ε, lane occupancy) move through traced values.
+Recompile boundary: (method, backend, statics, ops_backend, bucket) ×
+batch_slots — all dynamic knobs (seed, α, ε, lane occupancy) move through
+traced values.
 """
 from __future__ import annotations
 
@@ -51,6 +59,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.graphs.csr import CSRGraph
+from repro.core import ops as core_ops
 from repro.core.pr_nibble import (MAX_ITERS, pr_nibble_init,
                                   pr_nibble_round, pr_nibble_alive)
 from repro.core.pr_nibble_sparse import (pr_nibble_sparse_init,
@@ -75,6 +84,9 @@ class ClusterRequest:
     N: int = 10                # HK-PR Taylor degree
     t: float = 5.0             # HK-PR temperature
     backend: Optional[str] = None  # None = engine default; "dense" | "sparse"
+    ops_backend: Optional[str] = None  # None = engine default; "xla" |
+    #   "pallas" | "auto" — kernel backend (repro.core.ops), orthogonal to
+    #   the dense/sparse lane choice; results are bit-identical across it
 
 
 @dataclasses.dataclass
@@ -90,15 +102,16 @@ class ClusterResult:
     bucket: int                # capacity bucket that served the request
     overflow: bool             # True only if every bucket overflowed
     backend: str = "dense"     # lane type that served the request
+    ops_backend: str = "xla"   # kernel backend that served the request
 
 
 # --------------------------------------------------------------- step kernels
 # Module-level jits: every pool with the same (slots, caps, statics) shape
 # hits the same compile-cache entry, engine instances included.
 
-@functools.partial(jax.jit, static_argnums=(5, 6, 7, 8))
+@functools.partial(jax.jit, static_argnums=(5, 6, 7, 8, 9))
 def _prn_step(graph, state, eps, alpha, active, rounds: int,
-              optimized: bool, cap_e: int, beta: float):
+              optimized: bool, cap_e: int, beta: float, backend: str):
     """Advance each active lane up to ``rounds`` PR-Nibble push rounds."""
     def one(s, e, a, act):
         def cond(c):
@@ -107,7 +120,8 @@ def _prn_step(graph, state, eps, alpha, active, rounds: int,
 
         def body(c):
             s2, k = c
-            return (pr_nibble_round(graph, s2, e, a, optimized, cap_e, beta),
+            return (pr_nibble_round(graph, s2, e, a, optimized, cap_e, beta,
+                                    backend),
                     k + 1)
 
         s2, _ = jax.lax.while_loop(cond, body, (s, jnp.asarray(0, jnp.int32)))
@@ -115,9 +129,9 @@ def _prn_step(graph, state, eps, alpha, active, rounds: int,
     return jax.vmap(one)(state, eps, alpha, active)
 
 
-@functools.partial(jax.jit, static_argnums=(5, 6, 7))
+@functools.partial(jax.jit, static_argnums=(5, 6, 7, 8))
 def _prns_step(graph, state, eps, alpha, active, rounds: int,
-               optimized: bool, cap_e: int):
+               optimized: bool, cap_e: int, backend: str):
     """Advance each active lane up to ``rounds`` *sparse* PR-Nibble rounds.
 
     ``state`` is a vmapped :class:`PRNibbleSparseState` (SparseVec leaves
@@ -132,7 +146,8 @@ def _prns_step(graph, state, eps, alpha, active, rounds: int,
 
         def body(c):
             s2, k = c
-            return (pr_nibble_sparse_round(graph, s2, e, a, optimized, cap_e),
+            return (pr_nibble_sparse_round(graph, s2, e, a, optimized, cap_e,
+                                           backend),
                     k + 1)
 
         s2, _ = jax.lax.while_loop(cond, body, (s, jnp.asarray(0, jnp.int32)))
@@ -140,9 +155,9 @@ def _prns_step(graph, state, eps, alpha, active, rounds: int,
     return jax.vmap(one)(state, eps, alpha, active)
 
 
-@functools.partial(jax.jit, static_argnums=(4, 5, 6, 7))
+@functools.partial(jax.jit, static_argnums=(4, 5, 6, 7, 8))
 def _hk_step(graph, state, eps, active, rounds: int, N: int, t: float,
-             cap_e: int):
+             cap_e: int, backend: str):
     """Advance each active lane up to ``rounds`` HK-PR Taylor levels."""
     def one(s, e, act):
         def cond(c):
@@ -151,7 +166,7 @@ def _hk_step(graph, state, eps, active, rounds: int, N: int, t: float,
 
         def body(c):
             s2, k = c
-            return hk_pr_round(graph, s2, N, e, t, cap_e), k + 1
+            return hk_pr_round(graph, s2, N, e, t, cap_e, backend), k + 1
 
         s2, _ = jax.lax.while_loop(cond, body, (s, jnp.asarray(0, jnp.int32)))
         return s2
@@ -180,13 +195,16 @@ def _prns_inject(state, lane, seed, n: int, cap_f: int, cap_v: int):
 # ----------------------------------------------------------------- lane pool
 
 class _Pool:
-    """Fixed-shape lane pool for one (method, backend, statics, bucket)."""
+    """Fixed-shape lane pool for one (method, backend, ops_backend, statics,
+    bucket)."""
 
     def __init__(self, engine: "LocalClusterEngine", method: str,
-                 backend: str, statics: tuple, bucket: int):
+                 backend: str, statics: tuple, bucket: int,
+                 ops_backend: str = "xla"):
         self.engine = engine
         self.method = method
         self.backend = backend
+        self.ops_backend = ops_backend
         self.statics = statics
         self.bucket = bucket
         n = engine.graph.n
@@ -210,7 +228,7 @@ class _Pool:
         self.queue: deque = deque()
         engine.stats["pools_created"] += 1
         engine.stats["bucket_shapes"].add(
-            (method, backend, B, self.cap_f, self.cap_e))
+            (method, backend, ops_backend, B, self.cap_f, self.cap_e))
 
     def has_work(self) -> bool:
         return bool(self.queue) or any(l is not None for l in self.lane)
@@ -246,18 +264,19 @@ class _Pool:
             self.state = _prns_step(g, self.state, jnp.asarray(self.eps),
                                     jnp.asarray(self.alpha),
                                     jnp.asarray(active), rounds,
-                                    optimized, self.cap_e)
+                                    optimized, self.cap_e, self.ops_backend)
         elif self.method == "pr_nibble":
             optimized, beta = self.statics
             self.state = _prn_step(g, self.state, jnp.asarray(self.eps),
                                    jnp.asarray(self.alpha),
                                    jnp.asarray(active), rounds,
-                                   optimized, self.cap_e, beta)
+                                   optimized, self.cap_e, beta,
+                                   self.ops_backend)
         else:
             N, t = self.statics
             self.state = _hk_step(g, self.state, jnp.asarray(self.eps),
                                   jnp.asarray(active), rounds, N, t,
-                                  self.cap_e)
+                                  self.cap_e, self.ops_backend)
         self.engine.stats["steps"] += 1
 
     def harvest(self) -> None:
@@ -292,14 +311,16 @@ class _Pool:
             p_sv = jax.tree.map(lambda buf: buf[i], self.state.p)
             while True:
                 sw = sweep_cut_sparse(eng.graph, p_sv.ids, p_sv.vals,
-                                      p_sv.count, cap_se)
+                                      p_sv.count, cap_se,
+                                      backend=self.ops_backend)
                 if not bool(sw.overflow) or cap_se >= max_cap_se:
                     break
                 cap_se = min(cap_se * 2, max_cap_se)
         else:
             p_i = self.state.p[i]
             while True:
-                sw = sweep_cut_dense(eng.graph, p_i, cap_n, cap_se)
+                sw = sweep_cut_dense(eng.graph, p_i, cap_n, cap_se,
+                                     self.ops_backend)
                 if not bool(sw.overflow) or (cap_n >= n and
                                              cap_se >= max_cap_se):
                     break
@@ -322,6 +343,7 @@ class _Pool:
             bucket=self.bucket,
             overflow=overflowed,
             backend=self.backend,
+            ops_backend=self.ops_backend,
         )
 
 
@@ -342,13 +364,20 @@ class LocalClusterEngine:
                  cap_n: int = 1 << 11, sweep_cap_e: int = 1 << 17,
                  max_cap_e: int = 1 << 26, rounds_per_step: int = 16,
                  lru_pools: int = 4, cap_v: int = 1 << 12,
-                 backend: str = "auto", sparse_ratio: int = 4):
+                 backend: str = "auto", sparse_ratio: int = 4,
+                 ops_backend: str = "auto"):
         """``backend`` is the engine-wide default lane type: "dense",
         "sparse", or "auto" (pick per request by the graph-size/K rule of
         :func:`repro.core.batched_sparse.pick_backend` with ``sparse_ratio``).
-        ``cap_v`` is the sparse lanes' value capacity K at bucket 0."""
+        ``cap_v`` is the sparse lanes' value capacity K at bucket 0.
+        ``ops_backend`` is the engine-wide default *kernel* backend
+        ("xla" | "pallas" | "auto" → TPU? pallas : xla) — orthogonal to the
+        lane type; requests may pin their own via
+        ``ClusterRequest.ops_backend``.  Results are bit-identical across
+        kernel backends, so mixing them in one stream is safe."""
         if backend not in ("auto", "dense", "sparse"):
             raise ValueError(f"unknown backend: {backend!r}")
+        self.ops_backend = core_ops.resolve(ops_backend)
         self.graph = graph
         self.batch_slots = batch_slots
         self.cap_f = cap_f
@@ -390,6 +419,13 @@ class LocalClusterEngine:
             b = pick_backend(self.graph.n, self.cap_v, self.sparse_ratio)
         return b
 
+    def _resolve_ops_backend(self, req: ClusterRequest) -> str:
+        """Kernel backend serving ``req``: its pin, else the engine default
+        ("auto" resolved at engine construction)."""
+        if req.ops_backend is None:
+            return self.ops_backend
+        return core_ops.resolve(req.ops_backend)
+
     def _pool_key(self, req: ClusterRequest, bucket: int) -> tuple:
         if req.method == "pr_nibble":
             statics = (req.optimized, req.beta)
@@ -397,13 +433,15 @@ class LocalClusterEngine:
             statics = (req.N, req.t)
         else:
             raise ValueError(f"unknown method: {req.method!r}")
-        return (req.method, self._resolve_backend(req), statics, bucket)
+        return (req.method, self._resolve_backend(req), statics,
+                self._resolve_ops_backend(req), bucket)
 
     def _enqueue(self, idx: int, req: ClusterRequest, bucket: int) -> None:
         key = self._pool_key(req, bucket)
         pool = self.pools.get(key)
         if pool is None:
-            pool = _Pool(self, req.method, key[1], key[2], bucket)
+            pool = _Pool(self, req.method, key[1], key[2], bucket,
+                         ops_backend=key[3])
             self.pools[key] = pool
         self.pools.move_to_end(key)
         pool.queue.append((idx, req))   # before evict: a pool with work is safe

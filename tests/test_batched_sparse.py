@@ -235,7 +235,8 @@ def test_engine_sparse_overflow_promotion(local_graph):
         assert r.pushes == int(ref.pushes)
         assert not r.overflow
     shapes = eng.stats["bucket_shapes"]
-    assert all(len(sh) == 5 for sh in shapes)   # (method, backend, B, f, e)
+    # (method, backend, ops_backend, B, f, e)
+    assert all(len(sh) == 6 for sh in shapes)
 
 
 # ------------------------------------------------- (e) memory accounting
