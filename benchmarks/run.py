@@ -7,8 +7,14 @@ config (the CI gate — must finish in a couple of minutes on one CPU core).
 Every requested suite runs even if an earlier one fails; failures are
 reported as ``<suite>/ERROR`` rows and the process exits nonzero at the end
 (the CI gate must fail loudly, not skip silently).
+
+Artifacts: a suite whose ``run()`` returns a dict gets it written as
+``BENCH_<suite>.json`` next to the CWD — the serving-latency suite
+(`benchmarks/serve_bench.py` → ``BENCH_serve.json``) starts the perf
+trajectory CI uploads per run.
 """
 import argparse
+import json
 import sys
 import traceback
 
@@ -20,11 +26,11 @@ def main() -> None:
                     help="smallest config per benchmark; used by CI")
     ap.add_argument("--only", default=None,
                     help="comma list: table1,table3,fig2,fig6,fig9,fig10,"
-                         "kernels,batched,sparse_batched,ops")
+                         "kernels,batched,sparse_batched,ops,serve")
     args = ap.parse_args()
     from . import (table1_pushes, table3_runtimes, fig2_opt_rule, fig6_params,
                    fig9_sweep_scaling, fig10_ncp, kernels_bench, batched_bench,
-                   sparse_batched_bench, ops_microbench)
+                   sparse_batched_bench, ops_microbench, serve_bench)
     smoke = args.smoke
     suites = {
         "table1": lambda: table1_pushes.run(smoke=smoke),
@@ -37,18 +43,25 @@ def main() -> None:
         "batched": lambda: batched_bench.run(smoke=smoke),
         "sparse_batched": lambda: sparse_batched_bench.run(smoke=smoke),
         "ops": lambda: ops_microbench.run(smoke=smoke),
+        "serve": lambda: serve_bench.run(smoke=smoke),
     }
     only = args.only.split(",") if args.only else list(suites)
     print("name,us_per_call,derived")
     failures = []
     for k in only:
         try:
-            suites[k]()
+            ret = suites[k]()
         except Exception as e:
             print(f"{k}/ERROR,0,{type(e).__name__}:{str(e)[:120]}",
                   file=sys.stdout, flush=True)
             traceback.print_exc(file=sys.stderr)
             failures.append(k)
+            continue
+        if isinstance(ret, dict):
+            path = f"BENCH_{k}.json"
+            with open(path, "w") as f:
+                json.dump(ret, f, indent=2, sort_keys=True)
+            print(f"wrote {path}", file=sys.stderr)
     if failures:
         print(f"FAILED suites: {','.join(failures)}", file=sys.stderr)
         sys.exit(1)

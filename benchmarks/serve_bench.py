@@ -1,0 +1,102 @@
+"""Serving-latency benchmark: deadline scheduler under a Poisson stream.
+
+The serving claim is different from the throughput claims of
+`batched_bench.py`: here requests *arrive over time* (Poisson process), each
+with a latency budget, and the metric is the request-latency distribution —
+p50/p95/p99 — plus the deadline-miss rate, per lane backend (dense vs
+sparse).  The `AsyncClusterEngine` runs in its background drive thread while
+this process plays an open-loop arrival schedule at it, the standard
+serving-benchmark shape.
+
+Emits the usual `name,us_per_call,derived` CSV rows (us = p50 latency) and
+returns a JSON-able dict that `benchmarks/run.py` writes to
+``BENCH_serve.json`` — the artifact CI uploads so the serving-latency
+trajectory accumulates across PRs.
+"""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from repro.serve import AsyncClusterEngine, ClusterRequest
+from .common import get_graph, emit
+
+
+def _percentiles(lat_ms):
+    lat = np.sort(np.asarray(lat_ms, np.float64))
+    pick = lambda q: float(lat[min(len(lat) - 1,
+                                   int(round(q / 100 * (len(lat) - 1))))])
+    return dict(p50_ms=pick(50), p95_ms=pick(95), p99_ms=pick(99))
+
+
+def _run_lane(graph, backend: str, n_requests: int, mean_gap_s: float,
+              deadline_ms: float, batch_slots: int, caps: dict,
+              seed: int = 0) -> dict:
+    """Play one Poisson-arrival stream at a fresh scheduler; returns the
+    latency/miss summary for the BENCH_serve.json artifact."""
+    rng = np.random.default_rng(seed)
+    seeds = rng.choice(np.flatnonzero(np.asarray(graph.deg) > 0),
+                       size=n_requests).astype(np.int32)
+    gaps = rng.exponential(mean_gap_s, size=n_requests)
+    sched = AsyncClusterEngine(graph, batch_slots=batch_slots,
+                               max_queue=4 * n_requests, backend=backend,
+                               **caps)
+    futs = []
+    with sched:
+        # warm the compile caches (all requests share one pool family), so
+        # the timed stream measures serving behavior, not jit time
+        sched.submit(ClusterRequest(seed=int(seeds[0]), alpha=0.05,
+                                    eps=1e-4)).result(timeout=300.0)
+        t0 = time.perf_counter()
+        for s, gap in zip(seeds, gaps):
+            time.sleep(float(gap))      # open-loop: arrivals don't wait
+            futs.append(sched.submit(
+                ClusterRequest(seed=int(s),
+                               alpha=float(rng.choice([0.05, 0.01])),
+                               eps=float(rng.choice([1e-4, 1e-5]))),
+                deadline_ms=deadline_ms))
+        results = [f.result(timeout=300.0) for f in futs]
+        wall_s = time.perf_counter() - t0
+    lat_ms = [f.latency_ms for f in futs]
+    missed = sum(r.deadline_missed for r in results)
+    out = _percentiles(lat_ms)
+    out.update(
+        deadline_miss_rate=missed / n_requests,
+        n_requests=n_requests,
+        deadline_ms=deadline_ms,
+        mean_gap_ms=mean_gap_s * 1e3,
+        wall_s=wall_s,
+        throughput_rps=n_requests / wall_s,
+        backend=backend,
+    )
+    return out
+
+
+def run(smoke: bool = False) -> dict:
+    name = "sbm-planted" if smoke else "randLocal-50k"
+    graph = get_graph(name)
+    n_requests = 16 if smoke else 64
+    mean_gap_s = 0.002 if smoke else 0.005
+    # the budget is deliberately tight enough that the slower lane misses it
+    # under the burst (the miss path must exercise in CI), loose enough that
+    # warm dense ticks hit — both outcomes are *reported*, never asserted
+    deadline_ms = 1000.0 if smoke else 250.0
+    caps = (dict(cap_f=1 << 10, cap_e=1 << 14, cap_n=1 << 10,
+                 sweep_cap_e=1 << 14) if smoke else {})
+    artifact = dict(graph=name, smoke=smoke, lanes={})
+    for backend in ("dense", "sparse"):
+        lane = _run_lane(graph, backend, n_requests, mean_gap_s, deadline_ms,
+                         batch_slots=4 if smoke else 8, caps=caps)
+        artifact["lanes"][backend] = lane
+        emit(f"serve/{name}/{backend}_poisson_B={n_requests}",
+             lane["p50_ms"] * 1e3,
+             f"p95_ms={lane['p95_ms']:.1f};p99_ms={lane['p99_ms']:.1f};"
+             f"miss_rate={lane['deadline_miss_rate']:.3f};"
+             f"rps={lane['throughput_rps']:.1f}")
+    return artifact
+
+
+if __name__ == "__main__":
+    import json
+    print(json.dumps(run(), indent=2))

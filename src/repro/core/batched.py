@@ -63,7 +63,48 @@ __all__ = [
     "batched_pr_nibble_fixedcap", "batched_hk_pr_fixedcap",
     "batched_sweep_cut", "batched_cluster_fixedcap",
     "batched_pr_nibble", "batched_hk_pr", "batched_cluster",
+    "rounds_remaining_hint", "hk_rounds_remaining",
 ]
+
+
+# ----------------------------------------------- scheduler cost-model hints
+
+def rounds_remaining_hint(iterations, frontier_count,
+                          max_iters: int = MAX_ITERS) -> np.ndarray:
+    """Per-lane pending-push-rounds estimate for latency-aware schedulers.
+
+    PR-Nibble has no closed-form round count — termination depends on how the
+    residual drains — so the serving scheduler (serve/scheduler.py) needs a
+    cheap host-side predictor to turn "EMA tick cost" into "estimated time to
+    finish".  This uses two observables of the lane state:
+
+      * ``frontier_count == 0`` → the lane is finished: 0 rounds remain.
+      * otherwise, a survival ("Lindy") estimate: a run that has already
+        pushed ``t`` rounds is expected to push about ``t`` more, clamped to
+        ``[1, max_iters - t]``.  Push-round counts across seeds are
+        heavy-tailed (the NCP sweeps make this visible), where this estimator
+        is the right crude prior; it deliberately under-promises early
+        (t small → short estimate, refined every tick as t grows).
+
+    Vectorized over lanes: ``iterations`` / ``frontier_count`` are int-like
+    [B] (scalars broadcast); returns int64[B] estimated rounds remaining.
+    This is a *hint* — scheduling consumes it, results never depend on it.
+    """
+    it = np.atleast_1d(np.asarray(iterations, np.int64))
+    fc = np.atleast_1d(np.asarray(frontier_count, np.int64))
+    rem = np.clip(it, 1, np.maximum(max_iters - it, 1))
+    return np.where(fc > 0, rem, 0)
+
+
+def hk_rounds_remaining(j, done, frontier_count, N: int) -> np.ndarray:
+    """Exact pending-rounds count for HK-PR lanes: the rounds are Taylor
+    levels, so an alive lane at level ``j`` has exactly ``N - j`` left
+    (0 when ``done`` or the frontier emptied).  Same [B] conventions as
+    :func:`rounds_remaining_hint`."""
+    j = np.atleast_1d(np.asarray(j, np.int64))
+    done = np.atleast_1d(np.asarray(done, bool))
+    fc = np.atleast_1d(np.asarray(frontier_count, np.int64))
+    return np.where(done | (fc == 0), 0, np.maximum(N - j, 0))
 
 
 # ------------------------------------------------------------ jitted kernels

@@ -50,7 +50,8 @@ import jax
 import jax.numpy as jnp
 
 from repro.graphs.csr import CSRGraph
-from .batched import _bucketed_retry, _prep_batch, _CapLadder
+from .batched import (_bucketed_retry, _prep_batch, _CapLadder,
+                      rounds_remaining_hint as _dense_rounds_remaining_hint)
 from .pr_nibble_sparse import pr_nibble_sparse_fixedcap
 from .sweep import sweep_cut_sparse
 
@@ -60,7 +61,21 @@ __all__ = [
     "batched_cluster_sparse_fixedcap",
     "batched_pr_nibble_sparse", "batched_cluster_sparse",
     "sparse_rows_to_dense", "sparse_lane_footprint", "pick_backend",
+    "sparse_rounds_remaining_hint",
 ]
+
+
+def sparse_rounds_remaining_hint(iterations, frontier_count,
+                                 max_iters: int = 10_000) -> np.ndarray:
+    """Pending-rounds estimate for *sparse* PR-Nibble lanes.
+
+    The sparse backend runs the same push rounds as the dense one (only the
+    state container differs), so the round-count predictor is shared:
+    :func:`repro.core.batched.rounds_remaining_hint` applied to the sparse
+    state's ``t`` / ``frontier.count``.  Exposed here so the scheduler's
+    cost model has one obvious import per backend.
+    """
+    return _dense_rounds_remaining_hint(iterations, frontier_count, max_iters)
 
 
 # ------------------------------------------------------------ jitted kernels

@@ -1,5 +1,10 @@
 from .engine import ServeConfig, generate, batched_serve
-from .cluster_engine import ClusterRequest, ClusterResult, LocalClusterEngine
+from .cluster_engine import (ClusterRequest, ClusterResult,
+                             LocalClusterEngine, UnknownTicket)
+from .scheduler import AsyncClusterEngine, ClusterFuture, QueueFull
+from .telemetry import MetricsRegistry, pool_label
 
 __all__ = ["ServeConfig", "generate", "batched_serve",
-           "ClusterRequest", "ClusterResult", "LocalClusterEngine"]
+           "ClusterRequest", "ClusterResult", "LocalClusterEngine",
+           "UnknownTicket", "AsyncClusterEngine", "ClusterFuture",
+           "QueueFull", "MetricsRegistry", "pool_label"]

@@ -39,6 +39,22 @@ scan inside the rounds dispatches to (:mod:`repro.core.ops`).  Results are
 bit-identical across kernel backends, so the scheduler may serve a mixed
 stream from differently-backed pools without changing any answer.
 
+Scheduling surface
+------------------
+The engine itself is a *drain-oriented* batcher; the asynchronous,
+deadline-aware layer lives above it in serve/scheduler.py
+(``AsyncClusterEngine``).  What this module exposes for that layer:
+per-pool stepping (:meth:`LocalClusterEngine.tick_pool` — one refill →
+step → harvest pass of a single pool, wall-time measured and folded into
+the pool's ``cost_ema``), pool observables (``occupancy``, ``tickets``,
+``pending_rounds``/``pending_ticks`` built on the batched layers'
+rounds-remaining hints), partial harvest for deadline expiry
+(:meth:`LocalClusterEngine.harvest_partial` → ``deadline_missed=True``
+results), and batch result pickup (:meth:`LocalClusterEngine.take_completed`).
+Scheduling never changes answers: any interleaving of ``tick_pool`` calls
+steps each lane through the same round function in the same order, so a
+scheduled request's result is bit-identical to ``run()``'s.
+
 Capacity-ladder / retry contract: buckets follow the single-seed drivers'
 doubling schedule (cap_f, cap_v clamped at n+1; cap_e unclamped to
 ``max_cap_e``; sweep caps likewise), so a request promoted b buckets up
@@ -51,6 +67,8 @@ from __future__ import annotations
 
 import dataclasses
 import functools
+import math
+import time
 from collections import OrderedDict, deque
 from typing import Dict, List, Optional, Tuple
 
@@ -67,9 +85,16 @@ from repro.core.pr_nibble_sparse import (pr_nibble_sparse_init,
                                          pr_nibble_sparse_alive)
 from repro.core.hk_pr import hk_pr_init, hk_pr_round, hk_pr_alive
 from repro.core.sweep import sweep_cut_dense, sweep_cut_sparse
+from repro.core.batched import rounds_remaining_hint, hk_rounds_remaining
 from repro.core.batched_sparse import pick_backend
 
-__all__ = ["ClusterRequest", "ClusterResult", "LocalClusterEngine"]
+__all__ = ["ClusterRequest", "ClusterResult", "LocalClusterEngine",
+           "UnknownTicket"]
+
+
+class UnknownTicket(KeyError):
+    """Raised by :meth:`LocalClusterEngine.result` / :meth:`peek` for a
+    ticket this engine never issued, or whose result was already consumed."""
 
 
 @dataclasses.dataclass(frozen=True)
@@ -87,6 +112,12 @@ class ClusterRequest:
     ops_backend: Optional[str] = None  # None = engine default; "xla" |
     #   "pallas" | "auto" — kernel backend (repro.core.ops), orthogonal to
     #   the dense/sparse lane choice; results are bit-identical across it
+    # Scheduling hints, consumed by serve/scheduler.py's AsyncClusterEngine
+    # (the synchronous engine ignores them).  Never part of a pool key:
+    # deadlines/priorities order work, they never select a compiled program.
+    deadline_ms: Optional[float] = None  # latency budget from submission;
+    #   None = best effort (no deadline)
+    priority: int = 0          # higher = more urgent among undeadlined work
 
 
 @dataclasses.dataclass
@@ -103,6 +134,9 @@ class ClusterResult:
     overflow: bool             # True only if every bucket overflowed
     backend: str = "dense"     # lane type that served the request
     ops_backend: str = "xla"   # kernel backend that served the request
+    deadline_missed: bool = False  # True: the deadline expired and this is a
+    #   best-effort partial harvest (or a completed-but-late delivery), not
+    #   the converged diffusion
 
 
 # --------------------------------------------------------------- step kernels
@@ -226,12 +260,66 @@ class _Pool:
         self.alpha = np.zeros(B, np.float32)
         self.lane: List[Optional[Tuple[int, ClusterRequest]]] = [None] * B
         self.queue: deque = deque()
+        # Cost-model observables (serve/scheduler.py): EMA of measured tick
+        # wall time, fed by LocalClusterEngine.tick_pool.  None until the
+        # first tick (which typically includes this shape's compile).
+        self.cost_ema: Optional[float] = None
+        self.ticks = 0
         engine.stats["pools_created"] += 1
         engine.stats["bucket_shapes"].add(
             (method, backend, ops_backend, B, self.cap_f, self.cap_e))
 
     def has_work(self) -> bool:
         return bool(self.queue) or any(l is not None for l in self.lane)
+
+    # -- scheduler observables ----------------------------------------------
+
+    def note_tick(self, seconds: float) -> None:
+        """Fold one measured refill+step+harvest wall time into the EMA."""
+        self.ticks += 1
+        self.cost_ema = (seconds if self.cost_ema is None
+                         else 0.7 * self.cost_ema + 0.3 * seconds)
+
+    def occupancy(self) -> int:
+        """Active lanes (injected, not yet harvested)."""
+        return sum(l is not None for l in self.lane)
+
+    def tickets(self) -> List[int]:
+        """Every ticket resident in this pool: active lanes, then queued."""
+        out = [slot[0] for slot in self.lane if slot is not None]
+        out.extend(idx for idx, _ in self.queue)
+        return out
+
+    def pending_rounds(self) -> np.ndarray:
+        """Estimated push rounds remaining per active lane (0 for idle
+        lanes).  PR-Nibble lanes (dense or sparse — same round structure)
+        use the survival hint :func:`repro.core.batched.rounds_remaining_hint`;
+        HK-PR lanes know their remaining Taylor levels exactly
+        (:func:`repro.core.batched.hk_rounds_remaining`).  Costs one small
+        device→host sync per call."""
+        mask = np.array([l is not None for l in self.lane])
+        st = self.state
+        fc = np.asarray(st.frontier.count)
+        if self.method == "pr_nibble":
+            hints = rounds_remaining_hint(np.asarray(st.t), fc)
+        else:
+            N, _ = self.statics
+            hints = hk_rounds_remaining(np.asarray(st.j), np.asarray(st.done),
+                                        fc, N)
+        return np.where(mask, hints, 0)
+
+    def pending_ticks(self) -> int:
+        """Estimated scheduler ticks until this pool drains: the slowest
+        active lane's rounds / rounds_per_step, plus one such stretch per
+        refill wave the queue implies.  Crude by design — the scheduler
+        multiplies it by the tick-cost EMA to rank pools, nothing else."""
+        if not self.has_work():
+            return 0
+        r = max(self.engine.rounds_per_step, 1)
+        hints = self.pending_rounds()
+        lane_part = int(math.ceil(int(hints.max()) / r)) if hints.size else 0
+        waves = math.ceil(len(self.queue) / max(len(self.lane), 1))
+        return max(lane_part + waves * max(lane_part, 1), 1)
 
     def refill(self) -> None:
         n = self.engine.graph.n
@@ -295,6 +383,16 @@ class _Pool:
             if ovf[i] and self.engine._promote(idx, req, self.bucket):
                 continue
             self.engine._complete(idx, self._finalize(i, req, bool(ovf[i])))
+
+    def force_finalize(self, i: int) -> ClusterResult:
+        """Harvest lane ``i`` *now*, finished or not: sweep whatever
+        diffusion mass the lane has accumulated so far and free the slot.
+        The deadline scheduler uses this to turn an expired request into a
+        best-effort partial result instead of letting it finish late."""
+        idx, req = self.lane[i]
+        self.lane[i] = None
+        ovf = bool(np.asarray(self.state.overflow)[i])
+        return self._finalize(i, req, ovf)
 
     def _finalize(self, i: int, req: ClusterRequest,
                   overflowed: bool) -> ClusterResult:
@@ -393,7 +491,8 @@ class LocalClusterEngine:
         self.pools: "OrderedDict[tuple, _Pool]" = OrderedDict()
         self.stats: Dict = dict(steps=0, injections=0, promotions=0,
                                 completed=0, pools_created=0,
-                                pools_evicted=0, bucket_shapes=set())
+                                pools_evicted=0, partial_harvests=0,
+                                bucket_shapes=set())
         self._results: Dict[int, ClusterResult] = {}
         self._next_idx = 0
 
@@ -479,18 +578,42 @@ class LocalClusterEngine:
         self._enqueue(idx, req, 0)
         return idx
 
+    def live_pools(self) -> List[Tuple[tuple, _Pool]]:
+        """Snapshot of (key, pool) pairs that currently have work, in LRU
+        order (least recently progressed/enqueued first).  The deadline
+        scheduler plans over this; :meth:`poll` sweeps it."""
+        return [(k, p) for k, p in list(self.pools.items()) if p.has_work()]
+
+    def tick_pool(self, key: tuple) -> Optional[float]:
+        """One refill → step → harvest pass of a *single* pool — the unit of
+        work the deadline scheduler orders.  Returns the measured wall time
+        in seconds (also folded into the pool's ``cost_ema``), or None if
+        the pool is gone or idle.  A progressed pool is moved to the MRU end
+        so LRU iteration (:meth:`poll`) stays fair."""
+        pool = self.pools.get(key)
+        if pool is None or not pool.has_work():
+            return None
+        t0 = time.perf_counter()
+        pool.refill()
+        pool.step()
+        pool.harvest()    # device→host sync: the measured time is honest
+        dt = time.perf_counter() - t0
+        pool.note_tick(dt)
+        if key in self.pools:   # harvest may promote+evict this very pool
+            self.pools.move_to_end(key)
+        return dt
+
     def poll(self) -> bool:
-        """One scheduler tick: refill, step, and harvest every live pool.
-        Returns True if any pool made progress."""
+        """One scheduler sweep: refill, step, and harvest every live pool,
+        visiting pools in LRU order and moving each progressed pool to the
+        MRU end.  A continuously-refilled hot pool therefore sinks behind
+        colder pools between sweeps and can never starve their harvest under
+        ``submit()``/``poll()`` interleaving.  Returns True if any pool made
+        progress."""
         progressed = False
-        for key in list(self.pools):
-            pool = self.pools.get(key)
-            if pool is None or not pool.has_work():
-                continue
-            pool.refill()
-            pool.step()
-            pool.harvest()
-            progressed = True
+        for key in list(self.pools):  # LRU order: coldest pools first
+            if self.tick_pool(key) is not None:
+                progressed = True
         return progressed
 
     def pending(self) -> int:
@@ -502,8 +625,96 @@ class LocalClusterEngine:
             pass
         self._evict_idle()
 
+    def _ticket_status(self, ticket) -> str:
+        """"ready" | "pending" | "never-issued" | "consumed"."""
+        if ticket in self._results:
+            return "ready"
+        if (not isinstance(ticket, (int, np.integer)) or ticket < 0
+                or ticket >= self._next_idx):
+            return "never-issued"
+        for pool in self.pools.values():
+            if ticket in pool.tickets():
+                return "pending"
+        return "consumed"
+
     def result(self, ticket: int) -> ClusterResult:
-        return self._results.pop(ticket)
+        """Pop the finished :class:`ClusterResult` for ``ticket``.  Raises
+        :class:`UnknownTicket` (a ``KeyError``) with a diagnosis — never
+        issued, already consumed, or still in flight — instead of a bare
+        ``dict.pop`` KeyError."""
+        status = self._ticket_status(ticket)
+        if status == "ready":
+            return self._results.pop(ticket)
+        if status == "pending":
+            raise UnknownTicket(
+                f"ticket {ticket} is still in flight — call poll()/drain() "
+                f"until it completes, or peek() to test readiness")
+        if status == "never-issued":
+            raise UnknownTicket(
+                f"ticket {ticket!r} was never issued by this engine")
+        raise UnknownTicket(
+            f"ticket {ticket} was already consumed "
+            f"(result() returns each result exactly once)")
+
+    def peek(self, ticket: int) -> Optional[ClusterResult]:
+        """Non-consuming :meth:`result`: the finished result, or None while
+        the ticket is still in flight.  Raises :class:`UnknownTicket` for
+        never-issued or already-consumed tickets."""
+        status = self._ticket_status(ticket)
+        if status == "ready":
+            return self._results[ticket]
+        if status == "pending":
+            return None
+        raise UnknownTicket(
+            f"ticket {ticket!r} was "
+            + ("never issued by this engine" if status == "never-issued"
+               else "already consumed"))
+
+    def take_completed(self, tickets=None) -> Dict[int, ClusterResult]:
+        """Pop finished results in bulk: {ticket: result} (exactly-once,
+        like :meth:`result`).  ``tickets`` restricts the pickup to that set
+        — the deadline scheduler passes the tickets it owns, so results
+        submitted to a shared engine out-of-band stay claimable via
+        :meth:`result`.  ``None`` pops everything."""
+        if tickets is None:
+            out, self._results = self._results, {}
+            return out
+        tickets = set(tickets)
+        out = {t: r for t, r in self._results.items() if t in tickets}
+        for t in out:
+            del self._results[t]
+        return out
+
+    def harvest_partial(self, ticket: int) -> bool:
+        """Force-finish a live request *now* for deadline expiry: a request
+        resident in a lane is swept as-is (best-effort cluster from the
+        partial diffusion); a still-queued request completes empty.  The
+        result is recorded with ``deadline_missed=True`` and retrieved via
+        :meth:`result`/:meth:`take_completed` like any other.  Returns False
+        when the ticket isn't live (unknown, finished, or consumed)."""
+        for key, pool in list(self.pools.items()):
+            for i, slot in enumerate(pool.lane):
+                if slot is not None and slot[0] == ticket:
+                    res = pool.force_finalize(i)
+                    res.deadline_missed = True
+                    self.stats["partial_harvests"] += 1
+                    self._complete(ticket, res)
+                    return True
+            for entry in pool.queue:
+                if entry[0] == ticket:
+                    pool.queue.remove(entry)
+                    _, req = entry
+                    res = ClusterResult(
+                        request=req, conductance=float("inf"), size=0,
+                        volume=0, support=0,
+                        cluster=np.zeros(0, np.int32), pushes=0,
+                        iterations=0, bucket=pool.bucket, overflow=False,
+                        backend=pool.backend, ops_backend=pool.ops_backend,
+                        deadline_missed=True)
+                    self.stats["partial_harvests"] += 1
+                    self._complete(ticket, res)
+                    return True
+        return False
 
     def run(self, requests: List[ClusterRequest]) -> List[ClusterResult]:
         """Submit, drain, and return results in request order."""

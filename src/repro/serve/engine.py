@@ -7,10 +7,18 @@ others (slot-wise cache reuse), the standard production pattern.
 
 The decode step is the same jit'd ``model.decode_fn`` the dry run lowers for
 the decode_* cells; cache shardings come from models/sharding.py.
+
+Telemetry: both serving stacks (this one and the clustering scheduler,
+serve/scheduler.py) report into the same
+:class:`repro.serve.telemetry.MetricsRegistry` type — pass one to
+``batched_serve(telemetry=...)`` to get per-wave latency histograms and
+request counters alongside the cluster scheduler's metrics in a single
+JSON export.
 """
 from __future__ import annotations
 
 import dataclasses
+import time
 from typing import Callable, List, Optional
 
 import numpy as np
@@ -18,6 +26,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.models.model import Model
+from .telemetry import MetricsRegistry
 
 __all__ = ["ServeConfig", "generate", "batched_serve"]
 
@@ -59,12 +68,17 @@ def generate(model: Model, params, prompts: jnp.ndarray,
 
 def batched_serve(model: Model, params, requests: List[np.ndarray],
                   batch_slots: int, cfg: ServeConfig = ServeConfig(),
-                  prompt_len: Optional[int] = None) -> List[np.ndarray]:
+                  prompt_len: Optional[int] = None,
+                  telemetry: Optional[MetricsRegistry] = None
+                  ) -> List[np.ndarray]:
     """Continuous batching over a request list.
 
     Requests are left-padded/truncated to ``prompt_len`` and packed into
     ``batch_slots`` lanes; each wave prefills the fresh lanes and decodes all
     lanes together.  Returns one generated array per request, in order.
+    ``telemetry`` (optional) records per-wave latency under
+    ``serve/wave_latency`` and counts requests under ``serve/requests`` —
+    the same registry type the clustering scheduler feeds.
     """
     prompt_len = prompt_len or max(len(r) for r in requests)
     results: List[Optional[np.ndarray]] = [None] * len(requests)
@@ -79,7 +93,11 @@ def batched_serve(model: Model, params, requests: List[np.ndarray],
         while len(lanes) < batch_slots:          # pad the wave
             lanes.append(np.zeros(prompt_len, dtype=np.int32))
         prompts = jnp.asarray(np.stack(lanes))
+        t0 = time.perf_counter()
         gen = np.asarray(generate(model, params, prompts, cfg))
+        if telemetry is not None:
+            telemetry.observe("serve/wave_latency", time.perf_counter() - t0)
+            telemetry.inc("serve/requests", take)
         for i in range(take):
             results[nxt + i] = gen[i]
         nxt += take

@@ -1,0 +1,195 @@
+"""Serving telemetry: the metrics registry the scheduler feeds *and* reads.
+
+The deadline scheduler (serve/scheduler.py) is a control loop: it measures
+per-pool tick cost, estimates slack, and orders work by it.  Those
+measurements have to live somewhere both observable (exported as JSON for
+dashboards / the `benchmarks/serve_bench.py` artifact) and readable back by
+the planner (the tick-cost EMAs *are* the cost model).  This module is that
+place — a small, dependency-free registry of four metric kinds:
+
+  * ``Counter``  — monotonically increasing int (deadline misses, rejects).
+  * gauge        — last-write-wins float (queue depth, slot occupancy).
+  * ``EMA``      — exponential moving average (per-pool tick wall-time; the
+                   planner's cost estimate, see ``AsyncClusterEngine._plan``).
+  * ``Histogram``— latency distribution with log-spaced buckets plus a
+                   bounded reservoir for p50/p95/p99 (exact up to the
+                   reservoir size, sampled beyond it — good enough for a
+                   serving dashboard, deterministic for tests).
+
+Metric names are slash-paths; per-pool metrics use the pool's label
+(:func:`pool_label`), e.g. ``pool/pr_nibble:dense:xla:(True, 1.0):b0/tick_latency``.
+The registry is thread-safe: ``submit()`` runs on caller threads while the
+drive loop records from the scheduler thread.
+
+``snapshot()`` returns a plain-JSON-able dict; ``to_json()`` serializes it.
+Telemetry never influences results — it observes scheduling, and scheduling
+never changes answers (docs/algorithms.md, bit-identity guarantee #3).
+"""
+from __future__ import annotations
+
+import bisect
+import json
+import random
+import threading
+from typing import Dict, List, Optional
+
+__all__ = ["Counter", "EMA", "Histogram", "MetricsRegistry", "pool_label"]
+
+
+def pool_label(key: tuple) -> str:
+    """Stable human-readable label for an engine pool key
+    ``(method, backend, statics, ops_backend, bucket)``."""
+    method, backend, statics, ops_backend, bucket = key
+    return f"{method}:{backend}:{ops_backend}:{statics}:b{bucket}"
+
+
+class Counter:
+    """Monotonic event counter.  ``inc`` is locked: counters are bumped from
+    caller threads (``submit``'s submitted/rejected) concurrently with the
+    drive loop, and a bare ``+=`` would lose increments."""
+
+    __slots__ = ("value", "_lock")
+
+    def __init__(self) -> None:
+        self.value = 0
+        self._lock = threading.Lock()
+
+    def inc(self, k: int = 1) -> None:
+        with self._lock:
+            self.value += k
+
+
+class EMA:
+    """Exponential moving average; ``value`` is None until the first update.
+
+    The scheduler's per-pool tick-cost estimate: robust to the one-off
+    compile-time spike of a pool's first tick (it decays at rate ``alpha``)
+    while tracking drift as lane occupancy changes.
+    """
+
+    __slots__ = ("alpha", "value")
+
+    def __init__(self, alpha: float = 0.3) -> None:
+        self.alpha = alpha
+        self.value: Optional[float] = None
+
+    def update(self, x: float) -> float:
+        x = float(x)
+        self.value = x if self.value is None else (
+            (1.0 - self.alpha) * self.value + self.alpha * x)
+        return self.value
+
+
+# Log-spaced latency bucket bounds (seconds): 1 µs .. ~100 s, ×~3.16/decade.
+_BUCKET_BOUNDS = tuple(10.0 ** (e / 2.0) for e in range(-12, 5))
+
+
+class Histogram:
+    """Latency histogram: log-spaced bucket counts + a bounded reservoir.
+
+    ``percentile(q)`` is exact while ``count <= reservoir`` (every sample
+    retained) and a uniform subsample beyond that (deterministic RNG so test
+    runs reproduce).  Bucket counts are always exact and exported alongside.
+    """
+
+    def __init__(self, reservoir: int = 4096) -> None:
+        self.count = 0
+        self.sum = 0.0
+        self.buckets = [0] * (len(_BUCKET_BOUNDS) + 1)
+        self._cap = reservoir
+        self._samples: List[float] = []
+        self._rng = random.Random(0)
+
+    def record(self, x: float) -> None:
+        x = float(x)
+        self.count += 1
+        self.sum += x
+        self.buckets[bisect.bisect_right(_BUCKET_BOUNDS, x)] += 1
+        if len(self._samples) < self._cap:
+            self._samples.append(x)
+        else:  # reservoir sampling: keep each sample with prob cap/count
+            j = self._rng.randrange(self.count)
+            if j < self._cap:
+                self._samples[j] = x
+
+    def percentile(self, q: float) -> Optional[float]:
+        """q in [0, 100]; None while empty."""
+        if not self._samples:
+            return None
+        s = sorted(self._samples)
+        idx = min(len(s) - 1, max(0, int(round(q / 100.0 * (len(s) - 1)))))
+        return s[idx]
+
+    def summary(self) -> Dict:
+        return dict(count=self.count, sum=self.sum,
+                    mean=(self.sum / self.count) if self.count else None,
+                    p50=self.percentile(50), p95=self.percentile(95),
+                    p99=self.percentile(99))
+
+
+class MetricsRegistry:
+    """Create-or-get registry of counters / gauges / EMAs / histograms."""
+
+    def __init__(self) -> None:
+        self._lock = threading.Lock()
+        self._counters: Dict[str, Counter] = {}
+        self._gauges: Dict[str, float] = {}
+        self._emas: Dict[str, EMA] = {}
+        self._hists: Dict[str, Histogram] = {}
+
+    # -- create-or-get -------------------------------------------------------
+
+    def counter(self, name: str) -> Counter:
+        with self._lock:
+            return self._counters.setdefault(name, Counter())
+
+    def ema(self, name: str, alpha: float = 0.3) -> EMA:
+        with self._lock:
+            return self._emas.setdefault(name, EMA(alpha))
+
+    def histogram(self, name: str) -> Histogram:
+        with self._lock:
+            return self._hists.setdefault(name, Histogram())
+
+    # -- record shortcuts ----------------------------------------------------
+
+    def inc(self, name: str, k: int = 1) -> None:
+        self.counter(name).inc(k)
+
+    def set_gauge(self, name: str, value: float) -> None:
+        with self._lock:
+            self._gauges[name] = float(value)
+
+    def observe(self, name: str, value: float) -> None:
+        self.histogram(name).record(value)
+
+    # -- read ----------------------------------------------------------------
+
+    def counter_value(self, name: str) -> int:
+        with self._lock:
+            c = self._counters.get(name)
+        return c.value if c is not None else 0
+
+    def ema_value(self, name: str) -> Optional[float]:
+        with self._lock:
+            e = self._emas.get(name)
+        return e.value if e is not None else None
+
+    def gauge_value(self, name: str) -> Optional[float]:
+        with self._lock:
+            return self._gauges.get(name)
+
+    # -- export --------------------------------------------------------------
+
+    def snapshot(self) -> Dict:
+        """Plain-dict view (JSON-able) of every metric."""
+        with self._lock:
+            return dict(
+                counters={k: c.value for k, c in self._counters.items()},
+                gauges=dict(self._gauges),
+                emas={k: e.value for k, e in self._emas.items()},
+                histograms={k: h.summary() for k, h in self._hists.items()},
+            )
+
+    def to_json(self, indent: Optional[int] = 2) -> str:
+        return json.dumps(self.snapshot(), indent=indent, sort_keys=True)

@@ -13,7 +13,8 @@ import jax.numpy as jnp
 from repro.core import (pr_nibble, pr_nibble_sparse, hk_pr, sweep_cut_dense,
                         batched_pr_nibble, batched_hk_pr, batched_cluster,
                         batched_sweep_cut)
-from repro.serve import ClusterRequest, LocalClusterEngine
+from repro.core.batched import rounds_remaining_hint, hk_rounds_remaining
+from repro.serve import ClusterRequest, LocalClusterEngine, UnknownTicket
 
 # Right-sized workspaces for the small test graphs: one compile per kernel
 # (rand_local-2000 has vol <= 2m = 19082 < 2^15; frontiers fit in 2^11).
@@ -209,3 +210,121 @@ def test_engine_rejects_unknown_method(sbm_graph):
     eng = LocalClusterEngine(sbm_graph)
     with pytest.raises(ValueError, match="unknown method"):
         eng.submit(ClusterRequest(seed=1, method="nibble"))
+
+
+def test_engine_unknown_ticket_and_peek(sbm_graph):
+    """result()/peek() diagnose never-issued, pending, and consumed tickets
+    with UnknownTicket (a KeyError subclass), and peek never consumes."""
+    eng = LocalClusterEngine(sbm_graph, batch_slots=2, **ENGINE_CAPS)
+    with pytest.raises(UnknownTicket, match="never issued"):
+        eng.result(0)
+    with pytest.raises(KeyError):          # subclass contract
+        eng.result(0)
+    t = eng.submit(ClusterRequest(seed=5, alpha=0.05, eps=1e-5))
+    assert eng.peek(t) is None             # pending → None, not an error
+    with pytest.raises(UnknownTicket, match="still in flight"):
+        eng.result(t)
+    eng.drain()
+    first = eng.peek(t)
+    assert first is not None and eng.peek(t) is first   # non-consuming
+    assert eng.result(t) is first
+    with pytest.raises(UnknownTicket, match="already consumed"):
+        eng.result(t)
+    with pytest.raises(UnknownTicket, match="already consumed"):
+        eng.peek(t)
+    with pytest.raises(UnknownTicket, match="never issued"):
+        eng.peek(t + 99)
+
+
+def test_engine_poll_fairness_two_pools(sbm_graph):
+    """A continuously-refilled hot pool must not starve a cold pool's
+    harvest: the cold request completes within the polls its solo run needs
+    even while the hot pool receives a new request every poll."""
+    cold_req = ClusterRequest(seed=7, method="hk_pr", eps=1e-5, N=8, t=5.0)
+    solo = LocalClusterEngine(sbm_graph, batch_slots=2, rounds_per_step=2,
+                              **ENGINE_CAPS)
+    ct = solo.submit(cold_req)
+    solo_polls = 0
+    while solo.peek(ct) is None:
+        solo.poll()
+        solo_polls += 1
+
+    eng = LocalClusterEngine(sbm_graph, batch_slots=2, rounds_per_step=2,
+                             **ENGINE_CAPS)
+    cold = eng.submit(cold_req)
+    rng = np.random.default_rng(7)
+    hot = []
+    polls = 0
+    while eng.peek(cold) is None:
+        # hot pool refilled before every poll — and submit marks it MRU
+        hot.append(eng.submit(ClusterRequest(
+            seed=int(rng.integers(0, sbm_graph.n)), alpha=0.05, eps=1e-5)))
+        eng.poll()
+        polls += 1
+        assert polls <= solo_polls + 1, \
+            "hot-pool refills delayed the cold pool's harvest"
+    # LRU fairness invariant: both pools progressed, so the pool order now
+    # ends with the most recently progressed; the cold pool (idle once
+    # harvested) must not have been pushed behind unvisited work
+    eng.drain()
+    for t in hot:
+        assert eng.result(t).size >= 0
+    assert eng.result(cold).pushes > 0
+
+
+def test_engine_eviction_promotion_mixed_stream(sbm_graph):
+    """LRU pool eviction + bucket promotion under a mixed dense/sparse,
+    mixed ops_backend request stream: counters move and every ticket still
+    resolves."""
+    eng = LocalClusterEngine(sbm_graph, batch_slots=2,
+                             cap_f=1 << 6, cap_e=1 << 8,
+                             cap_n=1 << 6, sweep_cap_e=1 << 8,
+                             lru_pools=2)
+    rng = np.random.default_rng(8)
+    reqs = []
+    for i in range(12):
+        seed = int(rng.integers(0, sbm_graph.n))
+        if i % 4 == 0:
+            reqs.append(ClusterRequest(seed=seed, alpha=0.05, eps=1e-5,
+                                       backend="dense", ops_backend="xla"))
+        elif i % 4 == 1:
+            reqs.append(ClusterRequest(seed=seed, alpha=0.05, eps=1e-5,
+                                       backend="sparse", ops_backend="xla"))
+        elif i % 4 == 2:
+            reqs.append(ClusterRequest(seed=seed, alpha=0.05, eps=1e-5,
+                                       backend="dense", ops_backend="pallas"))
+        else:
+            reqs.append(ClusterRequest(seed=seed, method="hk_pr", eps=1e-5,
+                                       N=8, t=5.0))
+    tickets = [eng.submit(r) for r in reqs]
+    eng.drain()
+    results = [eng.result(t) for t in tickets]   # every ticket resolves
+    s = eng.stats
+    assert s["completed"] == len(reqs)
+    assert s["promotions"] > 0, "tiny caps must force bucket promotion"
+    assert s["pools_evicted"] > 0, "4 pool families > lru_pools=2 must evict"
+    assert len(eng.pools) <= 2
+    shapes = s["bucket_shapes"]
+    assert {sh[1] for sh in shapes} == {"dense", "sparse"}
+    assert {sh[2] for sh in shapes} == {"xla", "pallas"}
+    for r, q in zip(results, reqs):
+        assert r.request is q
+        assert not r.overflow
+        assert r.size > 0 and np.isfinite(r.conductance)
+        assert r.backend == (q.backend or "dense")
+        assert r.ops_backend == (q.ops_backend or eng.ops_backend)
+
+
+def test_rounds_remaining_hints():
+    """The scheduler cost-model hints: done lanes report 0; live PR-Nibble
+    lanes report the clamped survival estimate; HK lanes are exact."""
+    np.testing.assert_array_equal(
+        rounds_remaining_hint([0, 3, 9_999], [1, 1, 1], max_iters=10_000),
+        [1, 3, 1])
+    np.testing.assert_array_equal(
+        rounds_remaining_hint([5, 5], [0, 4]), [0, 5])
+    np.testing.assert_array_equal(
+        hk_rounds_remaining([0, 3, 5], [False, False, True], [1, 1, 1], N=5),
+        [5, 2, 0])
+    np.testing.assert_array_equal(
+        hk_rounds_remaining([2], [False], [0], N=5), [0])

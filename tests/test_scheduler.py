@@ -1,0 +1,304 @@
+"""Deadline-aware async serving (serve/scheduler.py + serve/telemetry.py).
+
+The contracts under test, matching the acceptance criteria:
+
+  * EDF: futures resolve out of submission order when deadlines demand it,
+    and the planner provably orders the tight-deadline pool first.
+  * Deadline expiry returns a best-effort partial flagged
+    ``deadline_missed=True`` instead of blocking until convergence.
+  * ``QueueFull`` at the admission bound.
+  * Scheduling never changes answers: a scheduled stream's per-request
+    results are bit-identical to ``LocalClusterEngine.run()`` on the same
+    requests.
+  * ``serve_forever()`` drives from a background thread; telemetry exports
+    JSON the whole way.
+"""
+import json
+import threading
+
+import numpy as np
+import pytest
+
+from repro.core import pr_nibble
+from repro.serve import (AsyncClusterEngine, ClusterFuture, ClusterRequest,
+                         LocalClusterEngine, MetricsRegistry, QueueFull)
+from repro.serve.telemetry import EMA, Histogram, pool_label
+
+ENGINE_CAPS = dict(cap_f=1 << 11, cap_e=1 << 15, cap_n=1 << 10,
+                   sweep_cap_e=1 << 15)
+
+
+# ----------------------------------------------------------------- telemetry
+
+def test_histogram_percentiles_and_summary():
+    h = Histogram()
+    for v in range(1, 101):          # 1..100 ms
+        h.record(v / 1000.0)
+    assert h.count == 100
+    assert h.percentile(50) == pytest.approx(0.050, abs=0.002)
+    assert h.percentile(99) == pytest.approx(0.099, abs=0.002)
+    s = h.summary()
+    assert s["count"] == 100 and s["p95"] >= s["p50"]
+
+
+def test_ema_tracks_and_registry_roundtrips_json():
+    e = EMA(alpha=0.5)
+    assert e.value is None
+    e.update(1.0)
+    e.update(3.0)
+    assert e.value == pytest.approx(2.0)
+    reg = MetricsRegistry()
+    reg.inc("a/count", 3)
+    reg.set_gauge("a/depth", 7.0)
+    reg.ema("a/cost").update(0.25)
+    reg.observe("a/lat", 0.01)
+    snap = json.loads(reg.to_json())
+    assert snap["counters"]["a/count"] == 3
+    assert snap["gauges"]["a/depth"] == 7.0
+    assert snap["emas"]["a/cost"] == 0.25
+    assert snap["histograms"]["a/lat"]["count"] == 1
+    assert reg.ema_value("a/cost") == 0.25 and reg.ema_value("missing") is None
+
+
+# ------------------------------------------------------------ EDF scheduling
+
+def test_edf_futures_resolve_out_of_submission_order(sbm_graph):
+    """A slow low-priority request is submitted first; a tight-deadline
+    request (different pool) second.  Strict EDF (one pool per tick) must
+    plan the deadlined pool first and resolve its future first."""
+    sched = AsyncClusterEngine(sbm_graph, batch_slots=2, max_queue=8,
+                               max_pools_per_tick=1, rounds_per_step=1,
+                               **ENGINE_CAPS)
+    # slow: small eps → many push rounds, 1 round per tick
+    slow = sched.submit(ClusterRequest(seed=5, alpha=0.01, eps=1e-7,
+                                       priority=0))
+    fast = sched.submit(ClusterRequest(seed=305, method="hk_pr", eps=1e-4,
+                                       N=5, t=5.0),
+                        deadline_ms=60_000.0)
+    order = []
+    for _ in range(800):
+        sched.tick()
+        if fast.done() and "fast" not in order:
+            order.append("fast")
+        if slow.done() and "slow" not in order:
+            order.append("slow")
+        if fast.done() and not slow.done():
+            # while both were live, the planner put the deadlined pool first
+            assert sched.last_plan, "planner produced no order"
+        if slow.done() and fast.done():
+            break
+    assert order == ["fast", "slow"], "EDF must finish the deadline first"
+    assert not fast.result().deadline_missed
+    assert not slow.result().deadline_missed
+
+
+def test_edf_planner_orders_deadlined_pool_first(sbm_graph):
+    """Direct planner assertion: with two live pools, the one holding the
+    earlier deadline leads the plan; priority breaks undeadlined ties."""
+    sched = AsyncClusterEngine(sbm_graph, batch_slots=2, max_queue=8,
+                               max_pools_per_tick=0,  # plan only, step nothing
+                               **ENGINE_CAPS)
+    sched.submit(ClusterRequest(seed=5, alpha=0.01, eps=1e-7))
+    tight = sched.submit(ClusterRequest(seed=305, method="hk_pr", eps=1e-4,
+                                        N=5, t=5.0), deadline_ms=50.0)
+    sched.tick()     # admits, then plans over both pools
+    assert len(sched.last_plan) == 2
+    assert sched.last_plan[0][0] == "hk_pr", \
+        "tight-deadline pool must lead the EDF plan"
+    # undeadlined priority ordering
+    sched2 = AsyncClusterEngine(sbm_graph, batch_slots=2, max_queue=8,
+                                max_pools_per_tick=0, **ENGINE_CAPS)
+    sched2.submit(ClusterRequest(seed=5, alpha=0.01, eps=1e-6), priority=0)
+    sched2.submit(ClusterRequest(seed=305, method="hk_pr", eps=1e-4, N=5,
+                                 t=5.0), priority=3)
+    sched2.tick()
+    assert sched2.last_plan[0][0] == "hk_pr", \
+        "higher priority must lead among undeadlined pools"
+    for s in (sched, sched2):     # re-enable stepping before draining
+        s.max_pools_per_tick = None
+        s.drain()
+
+
+# ----------------------------------------------------------- deadline expiry
+
+def test_deadline_expiry_harvests_partial_not_blocking(sbm_graph):
+    """An already-expired deadline resolves on the next tick with a partial
+    best-effort result flagged deadline_missed=True — it never blocks until
+    convergence."""
+    sched = AsyncClusterEngine(sbm_graph, batch_slots=2, max_queue=8,
+                               rounds_per_step=1, **ENGINE_CAPS)
+    fut = sched.submit(ClusterRequest(seed=11, alpha=0.01, eps=1e-7),
+                       deadline_ms=0.0)
+    sched.tick()
+    assert fut.done(), "expired request must resolve immediately, not drain"
+    res = fut.result()
+    assert res.deadline_missed
+    # one tick of stepping happened before expiry: partial mass was swept
+    assert res.iterations >= 1 and res.support > 0
+    # the partial is strictly less work than the converged run
+    full = pr_nibble(sbm_graph, 11, 1e-7, 0.01,
+                     cap_f=ENGINE_CAPS["cap_f"], cap_e=ENGINE_CAPS["cap_e"])
+    assert res.pushes < int(full.pushes)
+    assert sched.engine.stats["partial_harvests"] == 1
+    assert sched.telemetry.counter_value("scheduler/deadline_missed") == 1
+
+
+def test_deadline_expiry_of_queued_request_completes_empty(sbm_graph):
+    """A request that expires while still waiting for a lane (never injected)
+    completes with an empty partial, also flagged."""
+    sched = AsyncClusterEngine(sbm_graph, batch_slots=1, max_queue=8,
+                               rounds_per_step=1, **ENGINE_CAPS)
+    occupant = sched.submit(ClusterRequest(seed=5, alpha=0.01, eps=1e-7))
+    queued = sched.submit(ClusterRequest(seed=105, alpha=0.01, eps=1e-7),
+                          deadline_ms=0.0)
+    sched.tick()
+    assert queued.done()
+    res = queued.result()
+    assert res.deadline_missed and res.size == 0 and res.support == 0
+    assert res.pushes == 0 and res.cluster.shape == (0,)
+    sched.drain()
+    assert not occupant.result().deadline_missed
+
+
+def test_late_natural_completion_is_flagged_not_silent(sbm_graph):
+    """A request that finishes by itself after its deadline is delivered in
+    full but flagged deadline_missed — never silently late."""
+    sched = AsyncClusterEngine(sbm_graph, batch_slots=2, max_queue=8,
+                               **ENGINE_CAPS)
+    # generous work, impossible deadline: whichever path resolves it
+    # (partial harvest or late completion) must carry the flag
+    fut = sched.submit(ClusterRequest(seed=7, alpha=0.05, eps=1e-5),
+                       deadline_ms=1e-6)
+    sched.drain()
+    assert fut.result().deadline_missed
+
+
+# --------------------------------------------------------- admission control
+
+def test_queue_full_at_admission_bound(sbm_graph):
+    sched = AsyncClusterEngine(sbm_graph, batch_slots=2, max_queue=2,
+                               **ENGINE_CAPS)
+    sched.submit(ClusterRequest(seed=1, alpha=0.05, eps=1e-5))
+    sched.submit(ClusterRequest(seed=2, alpha=0.05, eps=1e-5))
+    with pytest.raises(QueueFull, match="max_queue"):
+        sched.submit(ClusterRequest(seed=3, alpha=0.05, eps=1e-5))
+    assert sched.telemetry.counter_value("scheduler/rejected") == 1
+    sched.drain()    # the bound frees as work resolves
+    fut = sched.submit(ClusterRequest(seed=3, alpha=0.05, eps=1e-5))
+    sched.drain()
+    assert fut.done()
+
+
+def test_submit_validates_on_caller_thread(sbm_graph):
+    sched = AsyncClusterEngine(sbm_graph, batch_slots=2, **ENGINE_CAPS)
+    with pytest.raises(ValueError, match="unknown method"):
+        sched.submit(ClusterRequest(seed=1, method="nope"))
+    assert sched.inflight() == 0, "rejected request must not hold a slot"
+
+
+# ------------------------------------------------- scheduling never changes answers
+
+def test_scheduled_results_bit_identical_to_run(sbm_graph):
+    """Acceptance: per-request results of a scheduled stream equal
+    LocalClusterEngine.run() on the same requests, field for field."""
+    rng = np.random.default_rng(9)
+    reqs = []
+    for i in range(10):
+        seed = int(rng.integers(0, sbm_graph.n))
+        if i % 3 == 2:
+            reqs.append(ClusterRequest(seed=seed, method="hk_pr", eps=1e-5,
+                                       N=10, t=5.0))
+        else:
+            reqs.append(ClusterRequest(
+                seed=seed, alpha=float(rng.choice([0.05, 0.01])),
+                eps=float(rng.choice([1e-5, 1e-6]))))
+    ref = LocalClusterEngine(sbm_graph, batch_slots=4, **ENGINE_CAPS)
+    ref_results = ref.run(reqs)
+
+    sched = AsyncClusterEngine(sbm_graph, batch_slots=4, max_queue=32,
+                               max_pools_per_tick=1, **ENGINE_CAPS)
+    futs = [sched.submit(r) for r in reqs]
+    sched.drain()
+    for fut, want in zip(futs, ref_results):
+        got = fut.result()
+        assert not got.deadline_missed
+        assert got.conductance == want.conductance
+        assert got.size == want.size
+        assert got.volume == want.volume
+        assert got.support == want.support
+        assert got.pushes == want.pushes
+        assert got.iterations == want.iterations
+        assert got.bucket == want.bucket
+        np.testing.assert_array_equal(got.cluster, want.cluster)
+
+
+# -------------------------------------------------------- background thread
+
+def test_serve_forever_background_thread_and_callbacks(sbm_graph):
+    seen = []
+    done_evt = threading.Event()
+
+    def cb(fut: ClusterFuture):
+        seen.append(fut.result().size)
+        if len(seen) == 3:
+            done_evt.set()
+
+    with AsyncClusterEngine(sbm_graph, batch_slots=4, max_queue=32,
+                            **ENGINE_CAPS) as sched:
+        futs = [sched.submit(ClusterRequest(seed=s, alpha=0.05, eps=1e-5),
+                             deadline_ms=60_000.0) for s in (5, 105, 205)]
+        for f in futs:
+            f.add_done_callback(cb)
+        assert done_evt.wait(timeout=60.0), "callbacks never fired"
+    assert sorted(seen) == sorted(f.result().size for f in futs)
+    assert all(f.latency_ms is not None and f.latency_ms >= 0 for f in futs)
+    # the registry saw the whole lifecycle and exports as JSON
+    snap = json.loads(sched.telemetry.to_json())
+    assert snap["counters"]["scheduler/submitted"] == 3
+    assert snap["counters"]["scheduler/completed"] == 3
+    assert any(k.startswith("pool/") and k.endswith("/tick_latency")
+               for k in snap["histograms"])
+    assert any(k.endswith("/tick_cost") for k in snap["emas"])
+    assert "scheduler/inflight" in snap["gauges"]
+
+
+def test_future_result_timeout():
+    fut = ClusterFuture(ClusterRequest(seed=0))
+    with pytest.raises(TimeoutError):
+        fut.result(timeout=0.01)
+
+
+def test_wrapping_an_existing_engine(sbm_graph):
+    eng = LocalClusterEngine(sbm_graph, batch_slots=2, **ENGINE_CAPS)
+    sched = AsyncClusterEngine(eng, max_queue=4)
+    assert sched.engine is eng
+    # a ticket submitted to the shared engine out-of-band must survive the
+    # scheduler's bulk pickup and stay claimable via engine.result()
+    oob = eng.submit(ClusterRequest(seed=205, alpha=0.05, eps=1e-5))
+    fut = sched.submit(ClusterRequest(seed=5, alpha=0.05, eps=1e-5))
+    sched.drain()
+    assert fut.result().size > 0
+    eng.drain()                      # finish the out-of-band ticket if needed
+    assert eng.result(oob).size > 0
+    with pytest.raises(ValueError, match="engine_kwargs"):
+        AsyncClusterEngine(eng, batch_slots=4)
+
+
+# ------------------------------------------------------------ cost plumbing
+
+def test_pool_cost_observables_feed_planner(sbm_graph):
+    """tick_pool measures wall time into the pool EMA; pending_ticks is
+    positive while work remains and the registry's EMA mirrors the pool's."""
+    sched = AsyncClusterEngine(sbm_graph, batch_slots=2, max_queue=8,
+                               rounds_per_step=1, **ENGINE_CAPS)
+    sched.submit(ClusterRequest(seed=5, alpha=0.01, eps=1e-6))
+    sched.tick()
+    (key, pool), = sched.engine.live_pools()
+    assert pool.cost_ema is not None and pool.cost_ema > 0
+    assert pool.ticks >= 1
+    assert pool.pending_ticks() >= 1
+    assert pool.occupancy() >= 1
+    reg_ema = sched.telemetry.ema_value(f"pool/{pool_label(key)}/tick_cost")
+    assert reg_ema is not None and reg_ema > 0
+    sched.drain()
+    assert pool.pending_ticks() == 0
