@@ -55,5 +55,19 @@ def timeit(fn, *args, repeats: int = 3, prime: bool = True, **kw):
     return float(np.median(times)) * 1e6, out
 
 
+# Rows emitted since the last drain — benchmarks/run.py drains this per
+# suite to build the BENCH_<suite>.json artifact, so every suite's perf
+# trajectory accumulates in CI even when its run() returns nothing.
+_ROWS = []
+
+
 def emit(name: str, us: float, derived: str = ""):
     print(f"{name},{us:.1f},{derived}", flush=True)
+    _ROWS.append(dict(name=name, us_per_call=float(us), derived=derived))
+
+
+def drain_rows():
+    """Rows emitted since the previous drain (and reset the buffer)."""
+    global _ROWS
+    out, _ROWS = _ROWS, []
+    return out

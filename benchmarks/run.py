@@ -8,10 +8,12 @@ Every requested suite runs even if an earlier one fails; failures are
 reported as ``<suite>/ERROR`` rows and the process exits nonzero at the end
 (the CI gate must fail loudly, not skip silently).
 
-Artifacts: a suite whose ``run()`` returns a dict gets it written as
-``BENCH_<suite>.json`` next to the CWD — the serving-latency suite
-(`benchmarks/serve_bench.py` → ``BENCH_serve.json``) starts the perf
-trajectory CI uploads per run.
+Artifacts: EVERY suite writes a ``BENCH_<suite>.json`` next to the CWD,
+containing the CSV rows it emitted (captured via ``common.emit``) plus —
+when its ``run()`` returns a dict — that dict merged in (the serving
+suite's latency summary, the dist suite's exchange-volume accounting).
+CI uploads all of them, so the ops/batched/dist perf trajectories
+accumulate across runs alongside the serving latencies.
 """
 import argparse
 import json
@@ -26,11 +28,14 @@ def main() -> None:
                     help="smallest config per benchmark; used by CI")
     ap.add_argument("--only", default=None,
                     help="comma list: table1,table3,fig2,fig6,fig9,fig10,"
-                         "kernels,batched,sparse_batched,ops,serve")
+                         "kernels,batched,sparse_batched,ops,serve,"
+                         "dist_batched")
     args = ap.parse_args()
     from . import (table1_pushes, table3_runtimes, fig2_opt_rule, fig6_params,
                    fig9_sweep_scaling, fig10_ncp, kernels_bench, batched_bench,
-                   sparse_batched_bench, ops_microbench, serve_bench)
+                   sparse_batched_bench, ops_microbench, serve_bench,
+                   dist_batched_bench)
+    from .common import drain_rows
     smoke = args.smoke
     suites = {
         "table1": lambda: table1_pushes.run(smoke=smoke),
@@ -44,11 +49,13 @@ def main() -> None:
         "sparse_batched": lambda: sparse_batched_bench.run(smoke=smoke),
         "ops": lambda: ops_microbench.run(smoke=smoke),
         "serve": lambda: serve_bench.run(smoke=smoke),
+        "dist_batched": lambda: dist_batched_bench.run(smoke=smoke),
     }
     only = args.only.split(",") if args.only else list(suites)
     print("name,us_per_call,derived")
     failures = []
     for k in only:
+        drain_rows()   # rows are per-suite; discard anything stale
         try:
             ret = suites[k]()
         except Exception as e:
@@ -56,12 +63,15 @@ def main() -> None:
                   file=sys.stdout, flush=True)
             traceback.print_exc(file=sys.stderr)
             failures.append(k)
+            drain_rows()
             continue
+        artifact = dict(rows=drain_rows())
         if isinstance(ret, dict):
-            path = f"BENCH_{k}.json"
-            with open(path, "w") as f:
-                json.dump(ret, f, indent=2, sort_keys=True)
-            print(f"wrote {path}", file=sys.stderr)
+            artifact.update(ret)
+        path = f"BENCH_{k}.json"
+        with open(path, "w") as f:
+            json.dump(artifact, f, indent=2, sort_keys=True)
+        print(f"wrote {path}", file=sys.stderr)
     if failures:
         print(f"FAILED suites: {','.join(failures)}", file=sys.stderr)
         sys.exit(1)

@@ -24,6 +24,9 @@ from .batched import (BatchedDiffusionResult, BatchedClusterResult,
                       batched_pr_nibble, batched_hk_pr, batched_cluster,
                       batched_pr_nibble_fixedcap, batched_hk_pr_fixedcap,
                       batched_cluster_fixedcap, batched_sweep_cut)
+from .batched_dist import (BatchedDistDiffusionResult, DistLaneState,
+                           batched_dist_pr_nibble, batched_cluster_dist,
+                           dist_lane_kernels)
 from .batched_sparse import (BatchedSparseDiffusionResult,
                              BatchedSparseClusterResult,
                              batched_pr_nibble_sparse, batched_cluster_sparse,
@@ -52,6 +55,8 @@ __all__ = [
     "batched_pr_nibble", "batched_hk_pr", "batched_cluster",
     "batched_pr_nibble_fixedcap", "batched_hk_pr_fixedcap",
     "batched_cluster_fixedcap", "batched_sweep_cut",
+    "BatchedDistDiffusionResult", "DistLaneState",
+    "batched_dist_pr_nibble", "batched_cluster_dist", "dist_lane_kernels",
     "BatchedSparseDiffusionResult", "BatchedSparseClusterResult",
     "batched_pr_nibble_sparse", "batched_cluster_sparse",
     "batched_pr_nibble_sparse_fixedcap", "batched_cluster_sparse_fixedcap",

@@ -53,6 +53,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.graphs.csr import CSRGraph
+from . import ops as _ops
 from .frontier import next_pow2
 from .pr_nibble import MAX_ITERS, pr_nibble_fixedcap
 from .hk_pr import hk_pr_fixedcap
@@ -281,15 +282,17 @@ class _CapLadder:
     Generalized over every per-lane capacity, not just the vertex-count-like
     ones: ``cap_f`` (frontier slots), ``cap_e`` (edge workspace), and
     optionally ``cap_v`` (SparseVec value slots, the sparse backend's K),
-    ``cap_n``/``sweep_cap_e`` (sweep grid / sweep edge workspace).  ``None``
-    capacities are absent from the schedule.
+    ``cap_n``/``sweep_cap_e`` (sweep grid / sweep edge workspace), and
+    ``cap_x`` (the distributed path's per-owner exchange buckets, clamped
+    at ``cap_e``).  ``None`` capacities are absent from the schedule.
     """
 
     def __init__(self, n, cap_f, cap_e, max_cap_e, cap_n=None, sweep_cap_e=None,
-                 cap_v=None):
+                 cap_v=None, cap_x=None):
         self.n, self.cap_f, self.cap_e, self.max_cap_e = n, cap_f, cap_e, max_cap_e
         self.cap_n, self.sweep_cap_e = cap_n, sweep_cap_e
         self.cap_v = cap_v
+        self.cap_x = cap_x
 
     def exhausted(self):
         return self.cap_e >= self.max_cap_e
@@ -303,6 +306,10 @@ class _CapLadder:
             self.cap_n = min(self.cap_n * 2, self.n)
         if self.sweep_cap_e is not None:
             self.sweep_cap_e = self.sweep_cap_e * 2
+        if self.cap_x is not None:
+            # per-owner exchange buckets (distributed path): a bucket can
+            # never usefully exceed the edge workspace that fills it
+            self.cap_x = min(self.cap_x * 2, self.cap_e)
 
 
 def batched_pr_nibble(graph: CSRGraph, seeds, eps=1e-7, alpha=0.01,
@@ -319,6 +326,7 @@ def batched_pr_nibble(graph: CSRGraph, seeds, eps=1e-7, alpha=0.01,
     int32[B], ``overflow`` bool[B] (True only if max_cap_e was exhausted),
     and the dispatched ``buckets`` tuple for compile-shape accounting.
     """
+    graph = _ops.local_csr(graph)   # any graph-like (GraphHandle ok)
     seeds, B, eps, alpha = _prep_batch(seeds, eps, alpha)
     n = graph.n
     out = dict(p=np.zeros((B, n), np.float32), r=np.zeros((B, n), np.float32),
@@ -343,6 +351,7 @@ def batched_hk_pr(graph: CSRGraph, seeds, N: int = 20, eps=1e-7,
                   max_cap_e: int = 1 << 26,
                   backend: str = "xla") -> BatchedDiffusionResult:
     """Batched bucketed HK-PR driver, mirroring :func:`batched_pr_nibble`."""
+    graph = _ops.local_csr(graph)   # any graph-like (GraphHandle ok)
     seeds, B, eps = _prep_batch(seeds, eps)
     n = graph.n
     out = dict(p=np.zeros((B, n), np.float32),
@@ -374,6 +383,7 @@ def batched_cluster(graph: CSRGraph, seeds, eps=1e-6, alpha=0.01,
     Sweep curves are reported on the fixed ``min(cap_n, n)`` grid of the
     first bucket so the NCP accumulator sees one consistent size axis.
     """
+    graph = _ops.local_csr(graph)   # any graph-like (GraphHandle ok)
     seeds, B, eps, alpha = _prep_batch(seeds, eps, alpha)
     n = graph.n
     grid = min(cap_n, n)

@@ -1,0 +1,425 @@
+"""Sharded batched PR-Nibble — vmap-over-seeds × shard_map-over-``data``.
+
+The batched engine (core/batched.py) amortizes B seed queries into one XLA
+dispatch, but assumes the whole CSR and B dense state vectors fit one chip.
+This module lifts the same batched rounds onto a vertex-partitioned graph
+(`repro.graphs.partition.PartitionedCSR` under a ``data`` mesh axis): every
+device holds its row slab plus the [B, rows_per] slice of every lane's
+``p``/``r``, each round expands all B local frontiers at once, and one
+bucketed all_to_all per round routes all B lanes' cross-shard contributions
+together — message volume ∝ total boundary mass of the batch, the
+distributed analogue of the paper's work-locality (and of Spielman–Teng's
+boundary-proportional locality argument).
+
+Bit-identity (docs/algorithms.md guarantee #7): each lane's trajectory is
+bit-identical to the single-chip dense driver because every float fold
+happens in the same order —
+
+  * the single-chip frontier is *sorted by vertex id* (``pack_unique``
+    sorts); under range partitioning, concatenating the per-device local
+    frontiers in device order reproduces exactly that order;
+  * per-device expansion walks frontier slots in order and each row's edges
+    in CSR order, so the global contribution stream is ordered
+    (owner-device of the *source*, slot, edge) — the single-chip order;
+  * routing sorts contributions by owner with a *stable* argsort and the
+    all_to_all concatenates received buckets in source-device order, so the
+    scatter-add at each destination vertex folds its contributions in the
+    single-chip stream order.
+
+Termination and overflow keep the batched contract: lanes are masked like
+XLA's vmapped while-loop (``select(alive, new, old)`` per lane), and
+overflowed lanes are repacked and retried one power-of-two bucket up by the
+shared :func:`repro.core.batched._bucketed_retry` ladder — now also
+laddering the per-owner exchange-bucket capacity ``cap_x`` (clamped at
+``cap_e``).  Overflow is exact: local frontier (``cap_f``), local edge
+workspace (``cap_e``), or any per-owner bucket (``cap_x``) exceeding
+capacity flags the lane.
+
+The module also exposes the step-wise lane kernels
+(:func:`dist_lane_kernels`: init / inject / step) that
+``LocalClusterEngine``'s ``backend="dist"`` pools drive — the same round
+body, advanced a bounded number of rounds per scheduler tick.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, NamedTuple, Tuple
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.compat import shard_map
+from repro.graphs.handle import as_handle
+from .batched import BatchedClusterResult, _bucketed_retry, _prep_batch, \
+    _CapLadder, batched_sweep_cut
+from .distributed import (_local_expand, local_frontier_pack, owner_buckets,
+                          push_shares)
+from .frontier import scatter_add_dense, scatter_set_dense
+from .pr_nibble import MAX_ITERS
+
+__all__ = [
+    "BatchedDistDiffusionResult", "DistLaneState",
+    "batched_dist_pr_nibble", "batched_cluster_dist", "dist_lane_kernels",
+]
+
+class BatchedDistDiffusionResult(NamedTuple):
+    p: np.ndarray           # f32[B, n]   (true n — sentinel padding sliced)
+    r: np.ndarray           # f32[B, n]
+    iterations: np.ndarray  # int32[B]
+    pushes: np.ndarray      # int32[B]
+    edge_work: np.ndarray   # int32[B]
+    exchanged: np.ndarray   # int32[B] — cross-shard contribution slots routed
+    overflow: np.ndarray    # bool[B] — True only if max_cap_e was exhausted
+    buckets: Tuple[tuple, ...]   # (batch, cap_f, cap_e, cap_x) dispatched
+
+
+class DistLaneState(NamedTuple):
+    """Sharded per-lane state the engine pools carry between ticks.
+
+    ``p``/``r`` are [B, n_pad] sharded over the mesh axis on dim 1; the
+    scalars are replicated [B].
+    """
+    p: jnp.ndarray
+    r: jnp.ndarray
+    t: jnp.ndarray            # int32[B]
+    pushes: jnp.ndarray       # int32[B]
+    edge_work: jnp.ndarray    # int32[B]
+    exchanged: jnp.ndarray    # int32[B]
+    front: jnp.ndarray        # int32[B] — global frontier count
+    overflow: jnp.ndarray     # bool[B]
+
+
+def _lane_alive(front, overflow, t, max_iters: int = MAX_ITERS):
+    return (front > 0) & (~overflow) & (t < max_iters)
+
+
+# -------------------------------------------------- per-device round (B lanes)
+
+def _make_round(axis: str, D: int, rows_per: int, cap_f: int, cap_e: int,
+                cap_x: int, optimized: bool, backend: str):
+    """Round body that runs INSIDE shard_map: advances all B lanes one
+    synchronous push round against this device's slab, with one batched
+    all_to_all for the whole lane batch."""
+
+    def round_all(indptr, indices, deg, me, base, p, r, eps, alpha):
+        def lane_local(p1, r1, e1, a1):
+            # local frontier / push rule / owner bucketing are the shared
+            # fold-order-critical helpers of repro.core.distributed — one
+            # definition serves both distributed engines
+            ids, cnt = local_frontier_pack(r1, deg, e1, rows_per, cap_f,
+                                           backend)
+            f_ovf = cnt > cap_f
+            f_cnt = jnp.minimum(cnt, cap_f)
+            f_valid = jnp.arange(cap_f, dtype=jnp.int32) < f_cnt
+            safe = jnp.minimum(ids, rows_per - 1)
+            rf = jnp.where(f_valid, r1[safe], 0.0)
+            dv = jnp.maximum(deg[safe], 1)
+            p_gain, r_self, share = push_shares(rf, dv, a1, optimized)
+            p_new = scatter_add_dense(p1, ids, p_gain, f_valid,
+                                      backend=backend)
+            r_new = scatter_set_dense(r1, ids, r_self, f_valid)
+            slot, dst, evalid, etot = _local_expand(
+                indptr, indices, deg, ids, f_valid, cap_e, rows_per, backend)
+            contrib = jnp.where(evalid, share[slot], 0.0)
+            owner, send_dst, send_val, x_ovf = owner_buckets(
+                dst, contrib, evalid, D, rows_per, cap_x, cap_e)
+            exch = jnp.sum((owner != me) & evalid).astype(jnp.int32)
+            ovf = f_ovf | x_ovf | (etot > cap_e)
+            return p_new, r_new, send_dst, send_val, f_cnt, etot, exch, ovf
+
+        (p_new, r_new, send_dst, send_val, f_cnt, etot, exch, ovf) = \
+            jax.vmap(lane_local)(p, r, eps, alpha)
+        # one collective for the whole lane batch: [B, D, cap_x] along owners
+        recv_dst = jax.lax.all_to_all(send_dst, axis, 1, 1, tiled=True)
+        recv_val = jax.lax.all_to_all(send_val, axis, 1, 1, tiled=True)
+        B = p.shape[0]
+        loc = recv_dst.reshape(B, -1) - base
+        ok = (loc >= 0) & (loc < rows_per)
+        r_new = jax.vmap(
+            lambda rr, ll, vv, kk: scatter_add_dense(rr, ll, vv, kk,
+                                                     backend=backend)
+        )(r_new, loc, recv_val.reshape(B, -1), ok)
+        above_next = jax.vmap(
+            lambda rr, e1: jnp.sum((rr >= deg * e1) & (deg > 0))
+        )(r_new, eps).astype(jnp.int32)
+        gfront = jax.lax.psum(above_next, axis)
+        gpush = jax.lax.psum(f_cnt, axis)
+        getot = jax.lax.psum(etot, axis)
+        gexch = jax.lax.psum(exch, axis)
+        lane_ovf = jax.lax.psum(ovf.astype(jnp.int32), axis) > 0
+        return p_new, r_new, gfront, gpush, getot, gexch, lane_ovf
+
+    return round_all
+
+
+def _masked_advance(c: DistLaneState, alive, rnd) -> DistLaneState:
+    """Fold one round's outputs into the carry, per-lane masked exactly like
+    the vmapped while-loop batching rule (finished lanes keep their state)."""
+    p_new, r_new, gfront, gpush, getot, gexch, lane_ovf = rnd
+    sel = jnp.where(alive[:, None], p_new, c.p), \
+        jnp.where(alive[:, None], r_new, c.r)
+    return DistLaneState(
+        p=sel[0], r=sel[1],
+        t=jnp.where(alive, c.t + 1, c.t),
+        pushes=jnp.where(alive, c.pushes + gpush, c.pushes),
+        edge_work=jnp.where(alive, c.edge_work + getot, c.edge_work),
+        exchanged=jnp.where(alive, c.exchanged + gexch, c.exchanged),
+        front=jnp.where(alive, gfront, c.front),
+        overflow=jnp.where(alive, c.overflow | lane_ovf, c.overflow))
+
+
+def _init_lanes(seeds, base, rows_per: int) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """[B, rows_per] zero ``p`` and seed-one-hot ``r`` local slices."""
+    B = seeds.shape[0]
+    mine = (seeds >= base) & (seeds < base + rows_per)
+    loc = jnp.clip(seeds - base, 0, rows_per - 1)
+    r0 = jax.vmap(
+        lambda i, ok: scatter_add_dense(jnp.zeros((rows_per,), jnp.float32),
+                                        i[None], jnp.float32(1.0)[None],
+                                        ok[None])
+    )(loc, mine)
+    return jnp.zeros((B, rows_per), jnp.float32), r0
+
+
+# ------------------------------------------------------------- jitted kernels
+
+@functools.lru_cache(maxsize=None)
+def _fixedcap_kernel(mesh, axis: str, rows_per: int, cap_f: int, cap_e: int,
+                     cap_x: int, optimized: bool, max_iters: int,
+                     backend: str):
+    """jit(shard_map) of the full batched run at one capacity bucket."""
+    D = int(mesh.shape[axis])
+    round_all = _make_round(axis, D, rows_per, cap_f, cap_e, cap_x,
+                            optimized, backend)
+
+    def engine(indptr, indices, deg, seeds, eps, alpha):
+        indptr, indices, deg = indptr[0], indices[0], deg[0]
+        me = jax.lax.axis_index(axis)
+        base = me * rows_per
+        B = seeds.shape[0]
+        p0, r0 = _init_lanes(seeds, base, rows_per)
+        z = jnp.zeros((B,), jnp.int32)
+        c0 = DistLaneState(p=p0, r=r0, t=z, pushes=z, edge_work=z,
+                           exchanged=z, front=jnp.ones((B,), jnp.int32),
+                           overflow=jnp.zeros((B,), bool))
+
+        def cond(c):
+            return jnp.any(_lane_alive(c.front, c.overflow, c.t, max_iters))
+
+        def body(c):
+            alive = _lane_alive(c.front, c.overflow, c.t, max_iters)
+            rnd = round_all(indptr, indices, deg, me, base,
+                            c.p, c.r, eps, alpha)
+            return _masked_advance(c, alive, rnd)
+
+        c = jax.lax.while_loop(cond, body, c0)
+        return c
+
+    return jax.jit(shard_map(
+        engine, mesh=mesh,
+        in_specs=(P(axis), P(axis), P(axis), P(), P(), P()),
+        out_specs=DistLaneState(p=P(None, axis), r=P(None, axis), t=P(),
+                                pushes=P(), edge_work=P(), exchanged=P(),
+                                front=P(), overflow=P())))
+
+
+@functools.lru_cache(maxsize=None)
+def dist_lane_kernels(mesh, axis: str, rows_per: int, cap_f: int, cap_e: int,
+                      cap_x: int, optimized: bool, backend: str):
+    """(init, inject, step) kernels for the engine's ``dist`` lane pools.
+
+    * ``init(seeds[B]) -> DistLaneState`` — fresh sharded state, one lane per
+      seed (pools start them inactive and overwrite via inject).
+    * ``inject(state, lane, seed) -> DistLaneState`` — reset one lane to a
+      fresh seed; ``lane``/``seed`` are traced, so refill never recompiles.
+    * ``step(indptr, indices, deg, state, eps, alpha, active, rounds) ->
+      DistLaneState`` — advance every active lane up to ``rounds`` rounds
+      (``rounds`` static).  Identical round body to the fixedcap kernel, so
+      a dist lane's trajectory is bit-identical to the single-chip driver's
+      regardless of tick boundaries.
+    """
+    D = int(mesh.shape[axis])
+    state_specs = DistLaneState(p=P(None, axis), r=P(None, axis), t=P(),
+                                pushes=P(), edge_work=P(), exchanged=P(),
+                                front=P(), overflow=P())
+    round_all = _make_round(axis, D, rows_per, cap_f, cap_e, cap_x,
+                            optimized, backend)
+
+    def init(seeds):
+        me = jax.lax.axis_index(axis)
+        base = me * rows_per
+        B = seeds.shape[0]
+        p0, r0 = _init_lanes(seeds, base, rows_per)
+        z = jnp.zeros((B,), jnp.int32)
+        return DistLaneState(p=p0, r=r0, t=z, pushes=z, edge_work=z,
+                             exchanged=z, front=jnp.ones((B,), jnp.int32),
+                             overflow=jnp.zeros((B,), bool))
+
+    def inject(state, lane, seed):
+        me = jax.lax.axis_index(axis)
+        base = me * rows_per
+        mine = (seed >= base) & (seed < base + rows_per)
+        row_r = scatter_add_dense(jnp.zeros((rows_per,), jnp.float32),
+                                  jnp.clip(seed - base, 0, rows_per - 1)[None],
+                                  jnp.float32(1.0)[None], mine[None])
+        z = jnp.asarray(0, jnp.int32)
+        return DistLaneState(
+            p=state.p.at[lane].set(0.0),
+            r=state.r.at[lane].set(row_r),
+            t=state.t.at[lane].set(z),
+            pushes=state.pushes.at[lane].set(z),
+            edge_work=state.edge_work.at[lane].set(z),
+            exchanged=state.exchanged.at[lane].set(z),
+            front=state.front.at[lane].set(jnp.asarray(1, jnp.int32)),
+            overflow=state.overflow.at[lane].set(False))
+
+    def step(indptr, indices, deg, state, eps, alpha, active, *, rounds):
+        indptr, indices, deg = indptr[0], indices[0], deg[0]
+        me = jax.lax.axis_index(axis)
+        base = me * rows_per
+
+        def cond(carry):
+            c, k = carry
+            alive = active & _lane_alive(c.front, c.overflow, c.t, MAX_ITERS)
+            return (k < rounds) & jnp.any(alive)
+
+        def body(carry):
+            c, k = carry
+            alive = active & _lane_alive(c.front, c.overflow, c.t, MAX_ITERS)
+            rnd = round_all(indptr, indices, deg, me, base,
+                            c.p, c.r, eps, alpha)
+            return _masked_advance(c, alive, rnd), k + 1
+
+        c, _ = jax.lax.while_loop(cond, body,
+                                  (state, jnp.asarray(0, jnp.int32)))
+        return c
+
+    init_fn = jax.jit(shard_map(init, mesh=mesh, in_specs=(P(),),
+                                out_specs=state_specs))
+    inject_fn = jax.jit(shard_map(inject, mesh=mesh,
+                                  in_specs=(state_specs, P(), P()),
+                                  out_specs=state_specs))
+    step_fns = {}
+
+    def step_for(rounds: int):
+        """One jitted step kernel per (static) rounds-per-tick value."""
+        if rounds not in step_fns:
+            step_fns[rounds] = jax.jit(shard_map(
+                functools.partial(step, rounds=rounds), mesh=mesh,
+                in_specs=(P(axis), P(axis), P(axis), state_specs,
+                          P(), P(), P()),
+                out_specs=state_specs))
+        return step_fns[rounds]
+
+    return init_fn, inject_fn, step_for
+
+
+# ----------------------------------------------------------------- host driver
+
+def batched_dist_pr_nibble(graph, seeds, eps=1e-7, alpha=0.01,
+                           optimized: bool = True, cap_f: int = 1 << 12,
+                           cap_e: int = 1 << 16, cap_x: int = 1 << 12,
+                           max_cap_e: int = 1 << 26,
+                           max_iters: int = MAX_ITERS, backend: str = "xla",
+                           mesh: Any = None,
+                           axis: str = "data") -> BatchedDistDiffusionResult:
+    """Batched distributed driver with the per-seed bucketed retry ladder.
+
+    ``graph`` is any graph-like (``CSRGraph`` + ``mesh``, ``PartitionedCSR``
+    + ``mesh``, or a sharded ``GraphHandle``).  Per-seed outputs (``p``,
+    ``r``, ``iterations``, ``pushes``, ``edge_work``) are bit-identical to
+    :func:`repro.core.batched.batched_pr_nibble` on the gathered graph —
+    including seeds that climb the ladder, because both paths converge to a
+    non-overflowing bucket running the identical round trajectory.  ``cap_f``
+    and ``cap_e`` are *per-shard* capacities here; ``cap_x`` is the
+    per-owner exchange bucket (laddered alongside, clamped at ``cap_e``).
+    """
+    handle = as_handle(graph, mesh=mesh, axis=axis)
+    mesh = handle.require_mesh()
+    axis = handle.axis
+    pg = handle.partitioned()
+    seeds, B, eps, alpha = _prep_batch(seeds, eps, alpha)
+    n = pg.n_true
+    out = dict(p=np.zeros((B, n), np.float32), r=np.zeros((B, n), np.float32),
+               iterations=np.zeros(B, np.int32), pushes=np.zeros(B, np.int32),
+               edge_work=np.zeros(B, np.int32),
+               exchanged=np.zeros(B, np.int32))
+    ovf = np.zeros(B, bool)
+    # clamp the *initial* caps like the ladder clamps its steps: a local
+    # frontier can't exceed the shard's rows, a bucket can't exceed cap_e
+    cap_f = min(cap_f, pg.rows_per + 1)
+    cap_x = min(cap_x, cap_e)
+    lad = _CapLadder(pg.rows_per, cap_f, cap_e, max_cap_e, cap_x=cap_x)
+
+    def dispatch(sel):
+        fn = _fixedcap_kernel(mesh, axis, pg.rows_per, lad.cap_f, lad.cap_e,
+                              lad.cap_x, optimized, max_iters, backend)
+        c = fn(pg.indptr, pg.indices, pg.deg, jnp.asarray(seeds[sel]),
+               jnp.asarray(eps[sel]), jnp.asarray(alpha[sel]))
+        fields = dict(p=np.asarray(c.p)[:, :n], r=np.asarray(c.r)[:, :n],
+                      iterations=np.asarray(c.t), pushes=np.asarray(c.pushes),
+                      edge_work=np.asarray(c.edge_work),
+                      exchanged=np.asarray(c.exchanged),
+                      overflow=np.asarray(c.overflow))
+        return fields, (sel.size, lad.cap_f, lad.cap_e, lad.cap_x)
+
+    buckets = _bucketed_retry(B, dispatch, lad.advance, lad.exhausted, out,
+                              ovf)
+    return BatchedDistDiffusionResult(overflow=ovf, buckets=buckets, **out)
+
+
+def batched_cluster_dist(graph, seeds, eps=1e-6, alpha=0.01,
+                         optimized: bool = True, cap_f: int = 1 << 12,
+                         cap_e: int = 1 << 16, cap_x: int = 1 << 12,
+                         cap_n: int = 1 << 12, sweep_cap_e: int = 1 << 18,
+                         max_cap_e: int = 1 << 26, backend: str = "xla",
+                         mesh: Any = None,
+                         axis: str = "data") -> BatchedClusterResult:
+    """Distributed diffusion + per-lane sweep cut — the dist NCP inner loop.
+
+    The diffusion runs sharded (:func:`batched_dist_pr_nibble`); the sweep
+    runs on the handle's local CSR (gathered once and cached) over the
+    bit-identical ``p`` rows, so curves equal the dense path's.  Sweep
+    curves are reported on the ``min(cap_n, n)`` grid of the first bucket,
+    like :func:`repro.core.batched.batched_cluster`.
+    """
+    handle = as_handle(graph, mesh=mesh, axis=axis)
+    diff = batched_dist_pr_nibble(handle, seeds, eps, alpha, optimized,
+                                  cap_f, cap_e, cap_x, max_cap_e,
+                                  backend=backend)
+    g = handle.local()
+    n = g.n
+    grid = min(cap_n, n)
+    B = diff.p.shape[0]
+    out = dict(conductance=np.full((B, grid), np.inf, np.float32),
+               best_conductance=np.full(B, np.inf, np.float32),
+               best_size=np.zeros(B, np.int32),
+               best_volume=np.zeros(B, np.int32),
+               support=np.zeros(B, np.int32))
+    sweep_ovf = np.ones(B, bool)
+    pending = np.arange(B)
+    c_n, c_se = grid, sweep_cap_e
+    p_dev = jnp.asarray(diff.p)
+    while pending.size:
+        sw = batched_sweep_cut(g, p_dev[pending], c_n, c_se, backend=backend)
+        o = np.asarray(sw.overflow)
+        exhausted = c_n >= n and c_se >= max_cap_e
+        done = pending if exhausted else pending[~o]
+        take = slice(None) if exhausted else ~o
+        out["conductance"][done] = \
+            np.asarray(sw.conductance)[take][:, :grid]
+        out["best_conductance"][done] = np.asarray(sw.best_conductance)[take]
+        out["best_size"][done] = np.asarray(sw.best_size)[take]
+        out["best_volume"][done] = np.asarray(sw.best_volume)[take]
+        out["support"][done] = np.asarray(sw.nnz)[take]
+        sweep_ovf[done] = o[take]
+        if exhausted:
+            break
+        pending = pending[o]
+        c_n = min(c_n * 2, n)
+        c_se = min(c_se * 2, max_cap_e)
+    return BatchedClusterResult(
+        pushes=diff.pushes, iterations=diff.iterations,
+        overflow=diff.overflow | sweep_ovf, buckets=diff.buckets, **out)

@@ -50,6 +50,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.graphs.csr import CSRGraph
+from . import ops as _ops
 from .batched import (_bucketed_retry, _prep_batch, _CapLadder,
                       rounds_remaining_hint as _dense_rounds_remaining_hint)
 from .pr_nibble_sparse import pr_nibble_sparse_fixedcap
@@ -232,6 +233,7 @@ def batched_pr_nibble_sparse(graph: CSRGraph, seeds, eps=1e-7, alpha=0.01,
     ``seeds`` int-like[B] (scalars broadcast); ``eps``/``alpha`` broadcast to
     f32[B].  See :class:`BatchedSparseDiffusionResult` for output shapes.
     """
+    graph = _ops.local_csr(graph)   # any graph-like (GraphHandle ok)
     seeds, B, eps, alpha = _prep_batch(seeds, eps, alpha)
     n = graph.n
     out = dict(p_ids=np.full((B, cap_v), n, np.int32),
@@ -273,6 +275,7 @@ def batched_cluster_sparse(graph: CSRGraph, seeds, eps=1e-6, alpha=0.01,
     Sweep curves are reported on the first bucket's ``cap_v`` grid (retried
     lanes' longer curves are truncated to it, matching ``batched_cluster``).
     """
+    graph = _ops.local_csr(graph)   # any graph-like (GraphHandle ok)
     seeds, B, eps, alpha = _prep_batch(seeds, eps, alpha)
     n = graph.n
     out = dict(conductance=np.full((B, cap_v), np.inf, np.float32),
@@ -330,13 +333,24 @@ def sparse_lane_footprint(cap_f: int, cap_e: int, cap_v: int) -> dict:
     return dict(state=state, transient=transient, total=state + transient)
 
 
-def pick_backend(n: int, cap_v: int, ratio: int = 4) -> str:
-    """Dense-vs-sparse lane heuristic used by ``LocalClusterEngine``.
+def pick_backend(n: int, cap_v: int, ratio: int = 4, *,
+                 num_shards: int = 1,
+                 chip_budget: int | None = None) -> str:
+    """Lane-backend heuristic used by ``LocalClusterEngine``.
 
-    A dense lane persists 2·n values (p, r); a sparse lane persists 4·cap_v
-    slots plus sort-merge scratch and pays an O(log cap_v) factor on every
-    lookup.  Choose sparse only when the dense state is at least ``ratio``×
-    the sparse state: n ≥ 2·ratio·cap_v.  Requests can always pin a backend
-    explicitly (``ClusterRequest.backend``).
+    Dense vs sparse: a dense lane persists 2·n values (p, r); a sparse lane
+    persists 4·cap_v slots plus sort-merge scratch and pays an O(log cap_v)
+    factor on every lookup.  Choose sparse only when the dense state is at
+    least ``ratio``× the sparse state: n ≥ 2·ratio·cap_v.
+
+    Fits-on-chip: when the graph is sharded (``num_shards > 1``) and a
+    ``chip_budget`` (bytes) is given, a query whose dense per-lane state
+    2·4·n would blow the budget is routed to the distributed lanes
+    (``"dist"``) — the state then lives sharded, O(n/D) per chip.  With no
+    budget configured the local heuristic applies unchanged (sharding alone
+    never forces the slower multi-chip rounds onto a graph that fits).
+    Requests can always pin a backend explicitly (``ClusterRequest.backend``).
     """
+    if num_shards > 1 and chip_budget is not None and 8 * n > chip_budget:
+        return "dist"
     return "sparse" if n >= 2 * ratio * cap_v else "dense"

@@ -25,8 +25,10 @@ import numpy as np
 import jax.numpy as jnp
 
 from repro.graphs.csr import CSRGraph
+from repro.graphs.handle import as_handle
 from . import ops as core_ops
 from .batched import batched_cluster, batched_cluster_fixedcap
+from .batched_dist import batched_cluster_dist
 from .batched_sparse import batched_cluster_sparse
 
 __all__ = ["NCPResult", "ncp_batch", "ncp"]
@@ -52,36 +54,45 @@ def ncp_batch(graph: CSRGraph, seeds: jnp.ndarray, params: jnp.ndarray,
     return out.conductance, out.support, out.overflow
 
 
-def ncp(graph: CSRGraph, num_seeds: int = 256,
+def ncp(graph, num_seeds: int = 256,
         alphas=(0.1, 0.01), epss=(1e-5, 1e-6, 1e-7),
         batch: int = 64, seed: int = 0,
         cap_f: int = 1 << 12, cap_e: int = 1 << 16,
         cap_n: int = 1 << 12, sweep_cap_e: int = 1 << 18,
         backend: str = "dense", cap_v: int = 1 << 12,
-        ops_backend: str = "xla") -> NCPResult:
+        ops_backend: str = "xla", mesh=None,
+        dist_axis: str = "data") -> NCPResult:
     """Host driver: grid of (seed, α, ε) runs through the batched engine
-    (per-seed overflow retry included).
+    (per-seed overflow retry included).  ``graph`` is any graph-like
+    (``CSRGraph`` or :class:`~repro.graphs.handle.GraphHandle`).
 
     ``backend="sparse"`` routes every batch through the fused sparse path
     (:func:`repro.core.batched_sparse.batched_cluster_sparse`): per-lane
     memory O(cap_v) instead of O(n), sweep curves on the
     ``min(cap_n, cap_v)`` grid — the profile a billion-vertex NCP must use.
 
+    ``backend="dist"`` shards every batch over the handle's mesh
+    (:func:`repro.core.batched_dist.batched_cluster_dist`) — the multi-host
+    NCP sweep.  Per-seed diffusions are bit-identical to the dense path, so
+    the profile is too.
+
     ``ops_backend`` ("xla" | "pallas" | "auto") is orthogonal to the lane
     choice: it selects the kernel backend every scatter/merge/scan inside
     either path dispatches through (:mod:`repro.core.ops`); profiles are
     bit-identical across ops backends.
     """
-    if backend not in ("dense", "sparse"):
+    if backend not in ("dense", "sparse", "dist"):
         raise ValueError(f"unknown backend: {backend!r}")
+    handle = as_handle(graph, mesh=mesh, axis=dist_axis)
     ops_backend = core_ops.resolve(ops_backend)
     rng = np.random.default_rng(seed)
-    deg = np.asarray(graph.deg)
+    deg = core_ops.graph_degrees(handle)
     nonzero = np.flatnonzero(deg > 0)
     seeds = rng.choice(nonzero, size=num_seeds, replace=True).astype(np.int32)
     grid = [(e, a) for a in alphas for e in epss]
 
-    cap_n = min(cap_n, graph.n)   # sweep clamps its prefix cap to n
+    n = handle.n
+    cap_n = min(cap_n, n)         # sweep clamps its prefix cap to n
     if backend == "sparse":
         cap_n = min(cap_n, cap_v)  # sparse curves live on the cap_v grid
     best = np.full((cap_n,), np.inf, dtype=np.float32)
@@ -92,14 +103,20 @@ def ncp(graph: CSRGraph, num_seeds: int = 256,
             if sb.shape[0] < batch:  # pad final batch
                 sb = np.concatenate([sb, np.repeat(sb[:1], batch - sb.shape[0])])
             if backend == "sparse":
-                out = batched_cluster_sparse(graph, sb, eps, alpha,
+                out = batched_cluster_sparse(handle.local(), sb, eps, alpha,
                                              cap_f=cap_f, cap_e=cap_e,
                                              cap_v=cap_v,
                                              sweep_cap_e=sweep_cap_e,
                                              backend=ops_backend)
+            elif backend == "dist":
+                out = batched_cluster_dist(handle, sb, eps, alpha,
+                                           cap_f=cap_f, cap_e=cap_e,
+                                           cap_n=cap_n,
+                                           sweep_cap_e=sweep_cap_e,
+                                           backend=ops_backend)
             else:
-                out = batched_cluster(graph, sb, eps, alpha, cap_f=cap_f,
-                                      cap_e=cap_e, cap_n=cap_n,
+                out = batched_cluster(handle.local(), sb, eps, alpha,
+                                      cap_f=cap_f, cap_e=cap_e, cap_n=cap_n,
                                       sweep_cap_e=sweep_cap_e,
                                       backend=ops_backend)
             ok = ~out.overflow

@@ -55,7 +55,8 @@ from repro.kernels import ops as kops
 from repro.kernels.segment_merge import segment_merge_sorted
 
 __all__ = ["OPS", "backends", "register_backend", "resolve",
-           "scatter_add", "segment_merge", "diffusion_spmv", "prefix_sum"]
+           "scatter_add", "segment_merge", "diffusion_spmv", "prefix_sum",
+           "graph_degrees", "graph_expand", "local_csr"]
 
 OPS = ("scatter_add", "segment_merge", "diffusion_spmv", "prefix_sum")
 
@@ -131,6 +132,43 @@ def prefix_sum(x, *, backend: str = "xla"):
     """Inclusive prefix sum, dtype preserved (int scans are exact on every
     backend; f32 scans may reassociate on ``pallas``)."""
     return _impl("prefix_sum", backend)(x)
+
+
+# ------------------------------------------------------- the graph seam
+# Host-level drivers stop assuming a resident CSR: they ask these dispatchers,
+# which accept any graph-like (CSRGraph | PartitionedCSR | GraphHandle — see
+# repro.graphs.handle) and route to the representation that can answer.
+# Imports are lazy: frontier.py imports this module, and the graphs package
+# must stay importable without core.
+
+def graph_degrees(graph):
+    """Host int32[n] degree vector of any graph-like, without materializing a
+    resident CSR (partition slabs already carry degrees)."""
+    from repro.graphs.handle import as_handle
+    return as_handle(graph).degrees()
+
+
+def local_csr(graph):
+    """The resident-CSR view of any graph-like (materialized + cached from
+    the partition slabs when the handle was built sharded-first)."""
+    from repro.graphs.handle import as_local_csr
+    return as_local_csr(graph)
+
+
+def graph_expand(graph, frontier, cap_e: int, *, backend: str = "xla"):
+    """Neighborhood expansion (EDGEMAP) of ``frontier`` against any
+    graph-like.  Local handles route to :func:`repro.core.frontier.expand`;
+    a sharded-only handle raises — per-shard expansion belongs to the
+    distributed drivers (`repro.core.batched_dist` /
+    `repro.core.distributed`), which own the exchange collective."""
+    from repro.graphs.handle import as_handle
+    from .frontier import expand
+    handle = as_handle(graph)   # coerce first: bare PartitionedCSR included
+    if handle.is_sharded and not handle.has_local:
+        raise ValueError(
+            "graph_expand needs a resident CSR; this graph is sharded-only "
+            "— use the distributed drivers, or handle.local() to gather")
+    return expand(handle.local(), frontier, cap_e, backend=backend)
 
 
 # ------------------------------------------------------------ xla (reference)

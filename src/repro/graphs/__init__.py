@@ -1,9 +1,11 @@
 from .csr import CSRGraph, build_csr, from_edge_list, load_edge_file, ell_pack
 from .generators import rand_local, grid3d, rmat, sbm, ba, make_graph
 from .partition import PartitionedCSR, partition_rows, degree_reorder
+from .handle import GraphHandle, as_handle, as_local_csr
 
 __all__ = [
     "CSRGraph", "build_csr", "from_edge_list", "load_edge_file", "ell_pack",
     "rand_local", "grid3d", "rmat", "sbm", "ba", "make_graph",
     "PartitionedCSR", "partition_rows", "degree_reorder",
+    "GraphHandle", "as_handle", "as_local_csr",
 ]

@@ -30,15 +30,42 @@ class PartitionedCSR:
     ``indptr[d]`` is local (offsets into ``indices[d]``); column ids stay
     *global*.  All slabs are padded to identical shape so the whole structure
     can be fed through ``shard_map`` with a ``P('data')`` leading axis.
+
+    Padding contract: rows ``[n_true, n)`` are *sentinel* vertices added so
+    every shard has identical static shape.  They are guaranteed isolated —
+    degree 0, no real edge targets them, and the ``indices`` pad value is the
+    out-of-range sentinel ``n`` — so they can never enter a frontier (the
+    drivers' ``deg > 0`` guard) nor a sweep cut (zero mass, zero degree);
+    :func:`partition_rows` validates this and every consumer slices state
+    vectors back to ``n_true``.
     """
 
     indptr: jnp.ndarray    # int32[D, rows_per+1]
     indices: jnp.ndarray   # int32[D, max_local_nnz]
     deg: jnp.ndarray       # int32[D, rows_per]
-    n: int                 # global (padded) vertex count
+    n: int                 # global (padded) vertex count == rows_per · D
     m: int                 # global undirected edge count
     num_shards: int
     rows_per: int
+    n_true: int = -1       # unpadded vertex count (-1: unknown, treat as n)
+
+    def __post_init__(self):
+        if self.n_true < 0:
+            object.__setattr__(self, "n_true", self.n)
+        if self.n_true < self.n:
+            # degree-0 guard for *every* padded row, wherever it lives (the
+            # padding can span shards when rows_per < num_padded) — validated
+            # here so externally constructed instances honor the contract too
+            deg = np.asarray(self.deg).reshape(-1)
+            if deg[self.n_true:].any():
+                raise ValueError(
+                    "padded sentinel rows must have degree 0 — a nonzero-"
+                    "degree pad vertex could enter a frontier or sweep cut")
+
+    @property
+    def num_padded(self) -> int:
+        """Sentinel vertices appended to fill the last shard."""
+        return self.n - self.n_true
 
     def owner(self, v):
         return v // self.rows_per
@@ -66,9 +93,17 @@ def partition_rows(graph: CSRGraph, num_shards: int) -> PartitionedCSR:
         else:
             slabs.append(np.zeros(0, dtype=np.int32))
     max_nnz = max(1, max(s.shape[0] for s in slabs))
+    # pad value is n_pad — one past the last (padded) vertex, so a stray read
+    # of a pad slot can never alias a real vertex
     indices = np.full((num_shards, max_nnz), n_pad, dtype=np.int32)
     for d, s in enumerate(slabs):
+        if s.size and int(s.max()) >= g.n:
+            raise ValueError(
+                f"shard {d} has an edge targeting vertex {int(s.max())} >= "
+                f"n={g.n}: padded sentinel vertices must stay isolated")
         indices[d, : s.shape[0]] = s
+    # (the degree-0 padding guard lives in PartitionedCSR.__post_init__, so
+    # externally constructed instances are validated identically)
     return PartitionedCSR(
         indptr=jnp.asarray(indptrs),
         indices=jnp.asarray(indices),
@@ -77,6 +112,7 @@ def partition_rows(graph: CSRGraph, num_shards: int) -> PartitionedCSR:
         m=g.m,
         num_shards=num_shards,
         rows_per=rows_per,
+        n_true=int(g.n),
     )
 
 

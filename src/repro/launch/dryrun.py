@@ -219,10 +219,9 @@ def run_graph_cells(mesh_name: str, force: bool = False, out_dir=None,
     D = mesh.devices.size
     rows_per = (1 << 26) // D          # 64M-vertex graph
     nnz_per = rows_per * 16            # avg degree 16
-    make = build_dist_pr_nibble(
-        jax.make_mesh((D,), ("data",),
-                      axis_types=(jax.sharding.AxisType.Auto,)), "data",
-        exchange=exchange)
+    from repro.compat import make_mesh
+    make = build_dist_pr_nibble(make_mesh((D,), ("data",)), "data",
+                                exchange=exchange)
     fn = jax.jit(make(rows_per, 1 << 14, 1 << 18, 1 << 12))
     sds = (
         jax.ShapeDtypeStruct((D, rows_per + 1), jnp.int32),

@@ -8,7 +8,7 @@ import; nothing else in the repo does (tests and benches see 1 device).
 """
 from __future__ import annotations
 
-import jax
+from repro.compat import make_mesh
 
 __all__ = ["make_production_mesh", "make_host_mesh"]
 
@@ -16,12 +16,10 @@ __all__ = ["make_production_mesh", "make_host_mesh"]
 def make_production_mesh(*, multi_pod: bool = False):
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(
-        shape, axes, axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+    return make_mesh(shape, axes)
 
 
 def make_host_mesh(shape=(8,), axes=("data",)):
     """Small host-device mesh for distributed tests (subprocess with
     --xla_force_host_platform_device_count=8)."""
-    return jax.make_mesh(
-        shape, axes, axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+    return make_mesh(shape, axes)

@@ -26,10 +26,17 @@ O(n) per lane).  ``backend="sparse"`` lanes carry :class:`SparseVec`
 ``(ids, vals)`` pairs of capacity ``cap_v`` — per-lane live state O(cap_v),
 independent of n — and are harvested with the sparse sweep
 (:func:`repro.core.sweep.sweep_cut_sparse`), so a sparse request never
-materializes a dense vector anywhere on its path.  ``backend="auto"``
-(default) picks per request via :func:`repro.core.batched_sparse.pick_backend`
-(sparse iff n ≥ 2·ratio·cap_v); a request can pin its lane type with
-``ClusterRequest.backend``.  The sparse state exists only for plain
+materializes a dense vector anywhere on its path.  ``backend="dist"`` lanes (available when the
+engine's :class:`~repro.graphs.handle.GraphHandle` is sharded) carry their
+state *sharded over the mesh's data axis* — [B, n/D] per chip — and step
+through the shard_map'd round kernels of :mod:`repro.core.batched_dist`
+(one bucketed all_to_all per round for the whole pool); dist pools are keyed
+on the shard topology (axis, D), so two meshes never share a compiled shape.
+``backend="auto"`` (default) picks per request via
+:func:`repro.core.batched_sparse.pick_backend` (sparse iff n ≥ 2·ratio·cap_v;
+dist iff the graph is sharded and the dense lane state would blow
+``dist_chip_budget``); a request can pin its lane type with
+``ClusterRequest.backend``.  The sparse and dist states exist only for plain
 PR-Nibble (β = 1): HK-PR or β-selection requests always serve dense.
 
 Orthogonal to the lane type is the *kernel* backend
@@ -59,9 +66,10 @@ Capacity-ladder / retry contract: buckets follow the single-seed drivers'
 doubling schedule (cap_f, cap_v clamped at n+1; cap_e unclamped to
 ``max_cap_e``; sweep caps likewise), so a request promoted b buckets up
 computes bit-identically to the single-seed driver retrying b times.
-Recompile boundary: (method, backend, statics, ops_backend, bucket) ×
-batch_slots — all dynamic knobs (seed, α, ε, lane occupancy) move through
-traced values.
+Recompile boundary: (method, backend, statics, ops_backend, bucket, topo) ×
+batch_slots — ``topo`` is the shard topology (mesh axis, shard count) for
+dist pools, None for local ones; all dynamic knobs (seed, α, ε, lane
+occupancy) move through traced values.
 """
 from __future__ import annotations
 
@@ -77,7 +85,9 @@ import jax
 import jax.numpy as jnp
 
 from repro.graphs.csr import CSRGraph
+from repro.graphs.handle import GraphHandle, as_handle
 from repro.core import ops as core_ops
+from repro.core.batched_dist import dist_lane_kernels
 from repro.core.pr_nibble import (MAX_ITERS, pr_nibble_init,
                                   pr_nibble_round, pr_nibble_alive)
 from repro.core.pr_nibble_sparse import (pr_nibble_sparse_init,
@@ -229,18 +239,22 @@ def _prns_inject(state, lane, seed, n: int, cap_f: int, cap_v: int):
 # ----------------------------------------------------------------- lane pool
 
 class _Pool:
-    """Fixed-shape lane pool for one (method, backend, ops_backend, statics,
-    bucket)."""
+    """Fixed-shape lane pool for one (method, backend, statics, ops_backend,
+    bucket, topo) key.  ``topo`` is None for local (dense/sparse) pools and
+    the (mesh axis, shard count) pair for ``dist`` pools — shard topology is
+    pool-key material because it selects a different compiled SPMD program."""
 
     def __init__(self, engine: "LocalClusterEngine", method: str,
                  backend: str, statics: tuple, bucket: int,
-                 ops_backend: str = "xla"):
+                 ops_backend: str = "xla",
+                 topo: Optional[Tuple[str, int]] = None):
         self.engine = engine
         self.method = method
         self.backend = backend
         self.ops_backend = ops_backend
         self.statics = statics
         self.bucket = bucket
+        self.topo = topo
         n = engine.graph.n
         self.cap_f = min(engine.cap_f << bucket, n + 1)
         self.cap_e = engine.cap_e << bucket
@@ -249,13 +263,28 @@ class _Pool:
         self.cap_v = min(engine.cap_v << bucket, n + 1)
         B = engine.batch_slots
         # lanes start inactive; injected states overwrite these placeholders
-        if backend == "sparse":
-            init = lambda s: pr_nibble_sparse_init(s, n, self.cap_f, self.cap_v)
-        elif method == "pr_nibble":
-            init = lambda s: pr_nibble_init(s, n, self.cap_f)
+        if backend == "dist":
+            pg = engine.handle.partitioned()
+            mesh = engine.handle.require_mesh()
+            # dist cap_f is *per shard*: a local frontier can never exceed
+            # the shard's row count
+            self.cap_f = min(engine.cap_f << bucket, pg.rows_per + 1)
+            self.cap_x = min(engine.cap_x << bucket, self.cap_e)
+            optimized, _beta = statics
+            self._dist_init, self._dist_inject, self._dist_step_for = \
+                dist_lane_kernels(mesh, engine.handle.axis, pg.rows_per,
+                                  self.cap_f, self.cap_e, self.cap_x,
+                                  optimized, ops_backend)
+            self.state = self._dist_init(jnp.zeros((B,), jnp.int32))
         else:
-            init = lambda s: hk_pr_init(s, n, self.cap_f)
-        self.state = jax.vmap(init)(jnp.zeros((B,), jnp.int32))
+            if backend == "sparse":
+                init = lambda s: pr_nibble_sparse_init(s, n, self.cap_f,
+                                                       self.cap_v)
+            elif method == "pr_nibble":
+                init = lambda s: pr_nibble_init(s, n, self.cap_f)
+            else:
+                init = lambda s: hk_pr_init(s, n, self.cap_f)
+            self.state = jax.vmap(init)(jnp.zeros((B,), jnp.int32))
         self.eps = np.zeros(B, np.float32)
         self.alpha = np.zeros(B, np.float32)
         self.lane: List[Optional[Tuple[int, ClusterRequest]]] = [None] * B
@@ -267,7 +296,7 @@ class _Pool:
         self.ticks = 0
         engine.stats["pools_created"] += 1
         engine.stats["bucket_shapes"].add(
-            (method, backend, ops_backend, B, self.cap_f, self.cap_e))
+            (method, backend, ops_backend, B, self.cap_f, self.cap_e, topo))
 
     def has_work(self) -> bool:
         return bool(self.queue) or any(l is not None for l in self.lane)
@@ -299,6 +328,12 @@ class _Pool:
         device→host sync per call."""
         mask = np.array([l is not None for l in self.lane])
         st = self.state
+        if self.backend == "dist":
+            # dist lanes carry no Frontier object; the replicated global
+            # frontier count plays the same role in the survival hint
+            hints = rounds_remaining_hint(np.asarray(st.t),
+                                          np.asarray(st.front))
+            return np.where(mask, hints, 0)
         fc = np.asarray(st.frontier.count)
         if self.method == "pr_nibble":
             hints = rounds_remaining_hint(np.asarray(st.t), fc)
@@ -332,7 +367,9 @@ class _Pool:
             self.alpha[i] = req.alpha
             lane = jnp.asarray(i, jnp.int32)
             seed = jnp.asarray(req.seed, jnp.int32)
-            if self.backend == "sparse":
+            if self.backend == "dist":
+                self.state = self._dist_inject(self.state, lane, seed)
+            elif self.backend == "sparse":
                 self.state = _prns_inject(self.state, lane, seed, n,
                                           self.cap_f, self.cap_v)
             elif self.method == "pr_nibble":
@@ -345,8 +382,16 @@ class _Pool:
         active = np.array([l is not None for l in self.lane])
         if not active.any():
             return
-        g = self.engine.graph
         rounds = self.engine.rounds_per_step
+        if self.backend == "dist":
+            pg = self.engine.handle.partitioned()
+            self.state = self._dist_step_for(rounds)(
+                pg.indptr, pg.indices, pg.deg, self.state,
+                jnp.asarray(self.eps), jnp.asarray(self.alpha),
+                jnp.asarray(active))
+            self.engine.stats["steps"] += 1
+            return
+        g = self.engine.graph
         if self.backend == "sparse":
             optimized, _beta = self.statics
             self.state = _prns_step(g, self.state, jnp.asarray(self.eps),
@@ -369,11 +414,15 @@ class _Pool:
 
     def harvest(self) -> None:
         st = self.state
-        count = np.asarray(st.frontier.count)
         ovf = np.asarray(st.overflow)
-        if self.method == "pr_nibble":
+        if self.backend == "dist":
+            count = np.asarray(st.front)
+            finished = (count == 0) | ovf | (np.asarray(st.t) >= MAX_ITERS)
+        elif self.method == "pr_nibble":
+            count = np.asarray(st.frontier.count)
             finished = (count == 0) | ovf | (np.asarray(st.t) >= MAX_ITERS)
         else:
+            count = np.asarray(st.frontier.count)
             finished = (count == 0) | ovf | np.asarray(st.done)
         for i, slot in enumerate(self.lane):
             if slot is None or not finished[i]:
@@ -415,7 +464,12 @@ class _Pool:
                     break
                 cap_se = min(cap_se * 2, max_cap_se)
         else:
-            p_i = self.state.p[i]
+            # dist lanes sweep on the handle's local CSR: the sharded p row
+            # is sliced back to the true vertex count (sentinel padding can
+            # never enter the sweep), and — the rows being bit-identical to
+            # a dense lane's — the sweep result is too
+            p_i = (self.state.p[i][: n] if self.backend == "dist"
+                   else self.state.p[i])
             while True:
                 sw = sweep_cut_dense(eng.graph, p_i, cap_n, cap_se,
                                      self.ops_backend)
@@ -457,34 +511,51 @@ class LocalClusterEngine:
     incremental interface for callers interleaving their own work.
     """
 
-    def __init__(self, graph: CSRGraph, batch_slots: int = 8,
+    def __init__(self, graph, batch_slots: int = 8,
                  cap_f: int = 1 << 12, cap_e: int = 1 << 16,
                  cap_n: int = 1 << 11, sweep_cap_e: int = 1 << 17,
                  max_cap_e: int = 1 << 26, rounds_per_step: int = 16,
                  lru_pools: int = 4, cap_v: int = 1 << 12,
                  backend: str = "auto", sparse_ratio: int = 4,
-                 ops_backend: str = "auto"):
-        """``backend`` is the engine-wide default lane type: "dense",
-        "sparse", or "auto" (pick per request by the graph-size/K rule of
-        :func:`repro.core.batched_sparse.pick_backend` with ``sparse_ratio``).
-        ``cap_v`` is the sparse lanes' value capacity K at bucket 0.
-        ``ops_backend`` is the engine-wide default *kernel* backend
-        ("xla" | "pallas" | "auto" → TPU? pallas : xla) — orthogonal to the
-        lane type; requests may pin their own via
+                 ops_backend: str = "auto", cap_x: int = 1 << 12,
+                 dist_chip_budget: Optional[int] = None):
+        """``graph`` is any graph-like — a resident ``CSRGraph`` or a
+        :class:`~repro.graphs.handle.GraphHandle` (possibly sharded over a
+        mesh, which unlocks the ``dist`` lane pools).
+
+        ``backend`` is the engine-wide default lane type: "dense", "sparse",
+        "dist" (sharded handles only), or "auto" (pick per request by
+        :func:`repro.core.batched_sparse.pick_backend` with ``sparse_ratio``
+        and — when the handle is sharded — the fits-on-chip rule against
+        ``dist_chip_budget`` bytes of dense per-lane state).
+        ``cap_v`` is the sparse lanes' value capacity K at bucket 0;
+        ``cap_x`` is the dist lanes' per-owner exchange-bucket capacity at
+        bucket 0.  ``ops_backend`` is the engine-wide default *kernel*
+        backend ("xla" | "pallas" | "auto" → TPU? pallas : xla) — orthogonal
+        to the lane type; requests may pin their own via
         ``ClusterRequest.ops_backend``.  Results are bit-identical across
-        kernel backends, so mixing them in one stream is safe."""
-        if backend not in ("auto", "dense", "sparse"):
+        kernel backends *and* across lane backends for the dense/dist pair,
+        so mixing them in one stream is safe."""
+        if backend not in ("auto", "dense", "sparse", "dist"):
             raise ValueError(f"unknown backend: {backend!r}")
+        self.handle = as_handle(graph)
+        if backend == "dist":
+            if not self.handle.is_sharded:
+                raise ValueError(
+                    "backend='dist' needs a sharded GraphHandle "
+                    "(GraphHandle.shard(csr, mesh))")
+            self.handle.require_mesh()   # fail at construction, not submit
         self.ops_backend = core_ops.resolve(ops_backend)
-        self.graph = graph
         self.batch_slots = batch_slots
         self.cap_f = cap_f
         self.cap_e = cap_e
         self.cap_n = cap_n
         self.sweep_cap_e = sweep_cap_e
         self.cap_v = cap_v
+        self.cap_x = cap_x
         self.backend = backend
         self.sparse_ratio = sparse_ratio
+        self.dist_chip_budget = dist_chip_budget
         self.rounds_per_step = rounds_per_step
         self.lru_pools = lru_pools
         self.max_bucket = max(0, (max_cap_e // cap_e).bit_length() - 1)
@@ -496,26 +567,50 @@ class LocalClusterEngine:
         self._results: Dict[int, ClusterResult] = {}
         self._next_idx = 0
 
+    @property
+    def graph(self) -> CSRGraph:
+        """The resident-CSR view (materialized from the partition slabs and
+        cached when the engine was built sharded-first): what the local lane
+        pools step against and every harvest sweeps with."""
+        return self.handle.local()
+
     # -- scheduling ----------------------------------------------------------
 
     def _resolve_backend(self, req: ClusterRequest) -> str:
         """Which lane type serves ``req``: its pin, else the engine default,
-        with "auto" resolved by the graph-size/K heuristic.  Sparse state
-        exists only for plain PR-Nibble (β = 1): a *request-level* sparse pin
-        on an unsupported query is an error; an engine-level "sparse" default
-        or an "auto" resolution falls back to dense for those queries."""
+        with "auto" resolved by the graph-size/K (and, for sharded handles,
+        fits-on-chip) heuristic.  Sparse and dist state exists only for plain
+        PR-Nibble (β = 1): a *request-level* sparse/dist pin on an
+        unsupported query is an error; an engine-level "sparse"/"dist"
+        default or an "auto" resolution falls back to dense for those
+        queries."""
         b = req.backend if req.backend is not None else self.backend
-        if b not in ("auto", "dense", "sparse"):
+        if b not in ("auto", "dense", "sparse", "dist"):
             raise ValueError(f"unknown backend: {b!r}")
-        sparse_ok = req.method == "pr_nibble" and req.beta == 1.0
-        if not sparse_ok:
-            if req.backend == "sparse":
+        if b == "dist":
+            if not self.handle.is_sharded:
+                raise ValueError("backend='dist' needs a sharded GraphHandle")
+            # a sharded handle without a mesh can't run dist pools — raise
+            # here (submit validates on the caller's thread) rather than
+            # from _Pool.__init__ inside the scheduler's drive thread
+            self.handle.require_mesh()
+        lane_ok = req.method == "pr_nibble" and req.beta == 1.0
+        if not lane_ok:
+            if req.backend in ("sparse", "dist"):
                 raise ValueError(
-                    f"backend='sparse' supports only pr_nibble with beta=1.0 "
-                    f"(got method={req.method!r}, beta={req.beta})")
+                    f"backend={req.backend!r} supports only pr_nibble with "
+                    f"beta=1.0 (got method={req.method!r}, beta={req.beta})")
             return "dense"
         if b == "auto":
-            b = pick_backend(self.graph.n, self.cap_v, self.sparse_ratio)
+            # dist is only reachable for auto resolution when the handle can
+            # actually run it (sharded AND carries a mesh) — a mesh-less
+            # sharded handle falls back to the local heuristic instead of
+            # exploding at submit time
+            dist_ready = self.handle.is_sharded and self.handle.mesh is not None
+            b = pick_backend(
+                self.handle.n, self.cap_v, self.sparse_ratio,
+                num_shards=self.handle.num_shards if dist_ready else 1,
+                chip_budget=self.dist_chip_budget)
         return b
 
     def _resolve_ops_backend(self, req: ClusterRequest) -> str:
@@ -526,21 +621,28 @@ class LocalClusterEngine:
         return core_ops.resolve(req.ops_backend)
 
     def _pool_key(self, req: ClusterRequest, bucket: int) -> tuple:
+        """(method, backend, statics, ops_backend, bucket, topo) — ``topo``
+        is the shard topology (axis, D) for dist pools, None otherwise, so
+        dist pools can never alias local pools (or each other across
+        meshes) in the compile cache, the LRU, or the telemetry labels."""
         if req.method == "pr_nibble":
             statics = (req.optimized, req.beta)
         elif req.method == "hk_pr":
             statics = (req.N, req.t)
         else:
             raise ValueError(f"unknown method: {req.method!r}")
-        return (req.method, self._resolve_backend(req), statics,
-                self._resolve_ops_backend(req), bucket)
+        backend = self._resolve_backend(req)
+        topo = ((self.handle.axis, self.handle.num_shards)
+                if backend == "dist" else None)
+        return (req.method, backend, statics,
+                self._resolve_ops_backend(req), bucket, topo)
 
     def _enqueue(self, idx: int, req: ClusterRequest, bucket: int) -> None:
         key = self._pool_key(req, bucket)
         pool = self.pools.get(key)
         if pool is None:
             pool = _Pool(self, req.method, key[1], key[2], bucket,
-                         ops_backend=key[3])
+                         ops_backend=key[3], topo=key[5])
             self.pools[key] = pool
         self.pools.move_to_end(key)
         pool.queue.append((idx, req))   # before evict: a pool with work is safe

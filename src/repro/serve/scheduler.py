@@ -48,6 +48,8 @@ import time
 from typing import Callable, Dict, List, Optional
 
 from repro.graphs.csr import CSRGraph
+from repro.graphs.handle import GraphHandle
+from repro.graphs.partition import PartitionedCSR
 from .cluster_engine import (ClusterRequest, ClusterResult,
                              LocalClusterEngine)
 from .telemetry import MetricsRegistry, pool_label
@@ -138,7 +140,9 @@ class AsyncClusterEngine:
     Parameters
     ----------
     engine_or_graph : an existing ``LocalClusterEngine`` to wrap, or a
-        ``CSRGraph`` (one is built with ``**engine_kwargs``).
+        ``CSRGraph`` / ``GraphHandle`` (one is built with
+        ``**engine_kwargs``; a sharded handle unlocks the ``dist`` pools,
+        scheduled by the same EDF planner through the same tick-cost EMAs).
     max_queue : admission bound on unresolved requests (``QueueFull`` beyond).
     max_pools_per_tick : how many pools one tick steps, in EDF order.  None
         (default) steps every live pool — best throughput; 1 is strict EDF —
@@ -160,10 +164,13 @@ class AsyncClusterEngine:
                 raise ValueError("engine_kwargs only apply when constructing "
                                  "the engine from a graph")
             self.engine = engine_or_graph
-        elif isinstance(engine_or_graph, CSRGraph):
+        elif isinstance(engine_or_graph,
+                        (CSRGraph, GraphHandle, PartitionedCSR)):
+            # any graph-like the engine itself accepts (as_handle coerces)
             self.engine = LocalClusterEngine(engine_or_graph, **engine_kwargs)
         else:
-            raise TypeError(f"expected LocalClusterEngine or CSRGraph, got "
+            raise TypeError(f"expected LocalClusterEngine or a graph-like "
+                            f"(CSRGraph | GraphHandle | PartitionedCSR), got "
                             f"{type(engine_or_graph).__name__}")
         if max_queue < 1:
             raise ValueError("max_queue must be >= 1")

@@ -38,8 +38,19 @@ __all__ = ["Counter", "EMA", "Histogram", "MetricsRegistry", "pool_label"]
 
 def pool_label(key: tuple) -> str:
     """Stable human-readable label for an engine pool key
-    ``(method, backend, statics, ops_backend, bucket)``."""
-    method, backend, statics, ops_backend, bucket = key
+    ``(method, backend, statics, ops_backend, bucket[, topo])``.
+
+    ``topo`` — the shard topology ``(axis, num_shards)`` of a ``dist`` pool,
+    None for local pools — is folded into the backend segment
+    (``dist@data8``), so dist pools never alias dense/sparse pools in JSON
+    exports and the EDF planner's per-label cost EMAs stay per-topology.
+    Legacy 5-tuple keys label identically to before.
+    """
+    method, backend, statics, ops_backend, bucket = key[:5]
+    topo = key[5] if len(key) > 5 else None
+    if topo is not None:
+        axis, shards = topo
+        backend = f"{backend}@{axis}{shards}"
     return f"{method}:{backend}:{ops_backend}:{statics}:b{bucket}"
 
 

@@ -1,7 +1,27 @@
+import json
+import os
+import subprocess
+import sys
+
 import numpy as np
 import pytest
 
 from repro.graphs import sbm, rand_local, grid3d
+
+
+def run_subprocess_json(script: str, timeout: int = 900) -> dict:
+    """Run a python script in a subprocess and parse its ``RESULT:<json>``
+    line — the shared recipe for the 8-host-device distributed tests
+    (the child sets its own ``XLA_FLAGS`` device count before importing
+    jax, so the parent's flags are scrubbed to keep the recipe hermetic)."""
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(os.path.dirname(__file__), "..", "src")
+    env.pop("XLA_FLAGS", None)
+    proc = subprocess.run([sys.executable, "-c", script], env=env,
+                          capture_output=True, text=True, timeout=timeout)
+    assert proc.returncode == 0, proc.stderr[-4000:]
+    line = [l for l in proc.stdout.splitlines() if l.startswith("RESULT:")][0]
+    return json.loads(line[len("RESULT:"):])
 
 
 @pytest.fixture(scope="session")

@@ -1,0 +1,358 @@
+"""Sharded batched engine tests (ISSUE 5): bit-identity of the dist path,
+dist lane pools in the serving engine, and the partition padding guard.
+
+The 8-host-device runs execute in subprocesses (marker ``dist``) so the main
+test process keeps its single-device jax config — the same recipe as
+tests/test_distributed.py, but part of tier-1 (the marker is *not* excluded
+by the default ``-m`` filter) and re-run standalone by the CI dist-smoke job.
+"""
+import numpy as np
+import pytest
+
+from repro.graphs import (GraphHandle, as_handle, build_csr, degree_reorder,
+                          partition_rows, rand_local, sbm)
+from repro.core import pr_nibble, sweep_cut_dense
+from repro.core.batched_sparse import pick_backend
+from repro.serve.telemetry import pool_label
+from conftest import run_subprocess_json as _run_sub
+
+
+_PRELUDE = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import json
+import numpy as np
+import jax, jax.numpy as jnp
+from repro.launch.mesh import make_host_mesh
+from repro.graphs import sbm, rand_local, GraphHandle
+mesh = make_host_mesh()
+out = {}
+"""
+
+
+# --------------------------------------------------------- bit-identity (dist)
+
+_BITIDENT_SCRIPT = _PRELUDE + r"""
+from repro.core.batched import batched_pr_nibble
+from repro.core.batched_dist import batched_dist_pr_nibble
+
+for name, g in [("sbm", sbm(k=8, size=100, p_in=0.15, p_out=0.002, seed=1)),
+                ("randLocal", rand_local(1003, degree=5, seed=3))]:
+    h = GraphHandle.shard(g, mesh)
+    rng = np.random.default_rng(0)
+    seeds = rng.choice(np.flatnonzero(np.asarray(g.deg) > 0),
+                       size=6).astype(np.int32)
+    eps = np.array([1e-5, 1e-6, 1e-5, 1e-6, 1e-5, 1e-6], np.float32)
+    alpha = np.array([0.05, 0.01, 0.01, 0.05, 0.02, 0.03], np.float32)
+    ref = batched_pr_nibble(g, seeds, eps, alpha)
+    got = batched_dist_pr_nibble(h, seeds, eps, alpha,
+                                 cap_f=256, cap_e=4096, cap_x=1024)
+    out[name] = dict(
+        p_bitident=bool((got.p == ref.p).all()),
+        r_bitident=bool((got.r == ref.r).all()),
+        iters=bool((got.iterations == ref.iterations).all()),
+        pushes=bool((got.pushes == ref.pushes).all()),
+        edge_work=bool((got.edge_work == ref.edge_work).all()),
+        overflow=bool(got.overflow.any()),
+        exchanged_pos=bool((got.exchanged > 0).all()),
+        buckets=len(got.buckets),
+    )
+
+# bucket-overflow -> ladder-promotion: start the dist ladder at deliberately
+# tiny caps so the first bucket overflows, and require the promoted rerun to
+# still be bit-identical to the dense driver
+g = sbm(k=8, size=100, p_in=0.15, p_out=0.002, seed=1)
+h = GraphHandle.shard(g, mesh)
+rng = np.random.default_rng(1)
+seeds = rng.choice(np.flatnonzero(np.asarray(g.deg) > 0),
+                   size=4).astype(np.int32)
+ref = batched_pr_nibble(g, seeds, 1e-6, 0.05)
+got = batched_dist_pr_nibble(h, seeds, 1e-6, 0.05,
+                             cap_f=8, cap_e=64, cap_x=16)
+out["ladder"] = dict(
+    buckets=len(got.buckets),
+    p_bitident=bool((got.p == ref.p).all()),
+    r_bitident=bool((got.r == ref.r).all()),
+    counters=bool((got.iterations == ref.iterations).all()
+                  and (got.pushes == ref.pushes).all()),
+    overflow=bool(got.overflow.any()),
+)
+print("RESULT:" + json.dumps(out))
+"""
+
+
+@pytest.mark.dist
+def test_batched_dist_bit_identity():
+    out = _run_sub(_BITIDENT_SCRIPT)
+    for name in ("sbm", "randLocal"):
+        res = out[name]
+        assert res["p_bitident"] and res["r_bitident"], res
+        assert res["iters"] and res["pushes"] and res["edge_work"], res
+        assert not res["overflow"]
+        assert res["exchanged_pos"]   # the exchange counter must observe work
+    lad = out["ladder"]
+    assert lad["buckets"] > 1        # the tiny first bucket had to promote
+    assert lad["p_bitident"] and lad["r_bitident"] and lad["counters"], lad
+    assert not lad["overflow"]
+
+
+# ------------------------------------------------- engine dist pools + mixing
+
+_ENGINE_SCRIPT = _PRELUDE + r"""
+from repro.serve import ClusterRequest, LocalClusterEngine
+from repro.serve.scheduler import AsyncClusterEngine
+from repro.serve.telemetry import pool_label
+
+g = sbm(k=8, size=100, p_in=0.15, p_out=0.002, seed=1)
+h = GraphHandle.shard(g, mesh)
+rng = np.random.default_rng(0)
+seeds = rng.choice(np.flatnonzero(np.asarray(g.deg) > 0),
+                   size=12).astype(np.int32)
+caps = dict(cap_f=256, cap_e=1 << 13, cap_n=1 << 10, sweep_cap_e=1 << 14,
+            cap_x=1 << 11, cap_v=256)
+reqs = [ClusterRequest(seed=int(s), alpha=0.05, eps=1e-5,
+                       backend=["dense", "sparse", "dist", None][i % 4])
+        for i, s in enumerate(seeds)]
+
+eng_ref = LocalClusterEngine(g, batch_slots=4, backend="dense",
+                             **{k: v for k, v in caps.items() if k != "cap_x"})
+ref = eng_ref.run([ClusterRequest(seed=r.seed, alpha=r.alpha, eps=r.eps)
+                   for r in reqs])
+
+# mixed dense/sparse/dist stream through the async scheduler, manual ticks
+sched = AsyncClusterEngine(LocalClusterEngine(h, batch_slots=4, **caps),
+                           max_queue=64)
+futs = [sched.submit(r) for r in reqs]
+while sched.inflight():
+    sched.tick()
+res = [f.result() for f in futs]
+
+out["answers_match"] = all(
+    a.conductance == b.conductance and a.size == b.size
+    and a.pushes == b.pushes and a.iterations == b.iterations
+    and (np.sort(a.cluster) == np.sort(b.cluster)).all()
+    for a, b in zip(res, ref))
+out["served_backends"] = sorted({r.backend for r in res})
+labels = [pool_label(k) for k, _ in sched.engine.pools.items()]
+out["dist_labels"] = sorted(l for l in labels if "dist" in l)
+out["dist_pool_served"] = sum(r.backend == "dist" for r in res)
+
+# dist pools must be schedulable observables like any other pool
+eng2 = sched.engine
+req = ClusterRequest(seed=int(seeds[0]), alpha=0.05, eps=1e-5, backend="dist")
+t = eng2.submit(req)
+key = eng2._pool_key(req, 0)
+pool = eng2.pools[key]
+pool.refill()
+out["pending_rounds_pos"] = bool(pool.pending_rounds().max() >= 1)
+out["pending_ticks_pos"] = pool.pending_ticks() >= 1
+eng2.drain()
+out["late_result_ok"] = eng2.result(t).conductance == ref[0].conductance \
+    if reqs[0].seed == req.seed else True
+print("RESULT:" + json.dumps(out))
+"""
+
+
+@pytest.mark.dist
+def test_engine_dist_pools_mixed_stream():
+    out = _run_sub(_ENGINE_SCRIPT)
+    assert out["answers_match"]
+    assert out["served_backends"] == ["dense", "dist", "sparse"]
+    assert out["dist_pool_served"] == 3
+    # dist pools must be distinguishable in telemetry labels (shard count)
+    assert out["dist_labels"] and all("dist@data8" in l
+                                      for l in out["dist_labels"])
+    assert out["pending_rounds_pos"] and out["pending_ticks_pos"]
+    assert out["late_result_ok"]
+
+
+# ----------------------------------------------- partition padding guard
+
+_PADDING_SCRIPT = _PRELUDE + r"""
+from repro.core.batched_dist import batched_dist_pr_nibble
+
+# 1003 vertices over 8 shards -> rows_per=126, 5 padded sentinel vertices
+g = rand_local(1003, degree=5, seed=3)
+h = GraphHandle.shard(g, mesh)
+pg = h.partitioned()
+out["n_true"] = pg.n_true
+out["n_pad"] = pg.n
+out["num_padded"] = pg.num_padded
+deg = np.asarray(pg.deg).reshape(-1)
+out["padded_deg_zero"] = bool((deg[pg.n_true:] == 0).all())
+
+seeds = np.array([3, 500, 999, 1002], np.int32)  # 1002 in the padded shard
+got = batched_dist_pr_nibble(h, seeds[:3], 1e-6, 0.05,
+                             cap_f=256, cap_e=8192, cap_x=2048)
+# sliced outputs: padding never escapes the driver
+out["p_shape"] = list(got.p.shape)
+# a frontier can never contain a padded vertex: run with the raw kernel and
+# check no mass ever lands beyond n_true (p/r of padded rows must stay 0;
+# the driver's slice would hide it, so check support sums match full mass)
+out["mass_ok"] = bool(np.allclose(got.p.sum(axis=1) + got.r.sum(axis=1),
+                                  1.0, atol=1e-4))
+
+# multi-host NCP: the dist profile must equal the dense profile exactly
+# (bit-identical diffusions -> identical sweep curves -> identical minima)
+from repro.core.ncp import ncp
+kw = dict(num_seeds=8, alphas=(0.05,), epss=(1e-5,), batch=4,
+          cap_f=256, cap_e=8192, cap_n=512, sweep_cap_e=1 << 14)
+prof_dense = ncp(g, backend="dense", **kw)
+prof_dist = ncp(h, backend="dist", **kw)
+out["ncp_runs"] = [prof_dense.num_runs, prof_dist.num_runs]
+out["ncp_match"] = bool(
+    (prof_dense.best_conductance == prof_dist.best_conductance).all())
+print("RESULT:" + json.dumps(out))
+"""
+
+
+@pytest.mark.dist
+def test_partition_padding_guard():
+    out = _run_sub(_PADDING_SCRIPT)
+    assert out["n_true"] == 1003
+    assert out["n_pad"] == 8 * 126
+    assert out["num_padded"] == out["n_pad"] - out["n_true"]
+    assert out["padded_deg_zero"]       # degree-0 guard
+    assert out["p_shape"] == [3, 1003]  # sliced to n_true
+    # all diffusion mass is accounted for inside the true vertex range —
+    # nothing ever leaked into (or out through) a padded sentinel vertex
+    assert out["mass_ok"]
+    # ncp(backend="dist") reproduces the dense profile exactly
+    assert out["ncp_runs"][0] == out["ncp_runs"][1]
+    assert out["ncp_match"]
+
+
+# --------------------------------------------- host-side (single device) tests
+
+def test_partition_rows_records_true_n(local_graph):
+    # 2000 over 7 shards: rows_per=286 -> 2 padded sentinel vertices
+    pg = partition_rows(local_graph, 7)
+    assert pg.n_true == local_graph.n
+    assert pg.n == pg.rows_per * 7
+    assert pg.num_padded == pg.n - local_graph.n > 0
+    deg = np.asarray(pg.deg).reshape(-1)
+    assert (deg[pg.n_true:] == 0).all()
+    # the indices pad value is out of range of every real vertex
+    idx = np.asarray(pg.indices)
+    assert idx.max() <= pg.n
+
+
+def test_partition_rejects_edges_into_padding():
+    # a malformed CSR whose last shard's slab targets a would-be padded
+    # vertex must be rejected, not silently routed
+    g = build_csr(np.array([[0, 1], [1, 2], [2, 3], [3, 4]]), 5)
+    import dataclasses
+    bad = dataclasses.replace(g, n=4)   # n lies: vertex 4 is now "padding"
+    with pytest.raises(ValueError):
+        partition_rows(bad, 3)
+
+
+def test_graph_handle_gather_roundtrip(sbm_graph):
+    pg = partition_rows(sbm_graph, 8)
+    h = GraphHandle.from_partitioned(pg)
+    g2 = h.local()
+    assert g2.n == sbm_graph.n and g2.m == sbm_graph.m
+    assert (np.asarray(g2.indptr) == np.asarray(sbm_graph.indptr)).all()
+    assert (np.asarray(g2.indices) == np.asarray(sbm_graph.indices)).all()
+    assert (np.asarray(g2.deg) == np.asarray(sbm_graph.deg)).all()
+    # degrees() answers without a resident CSR
+    h2 = GraphHandle.from_partitioned(partition_rows(sbm_graph, 8))
+    assert (h2.degrees() == np.asarray(sbm_graph.deg)).all()
+
+
+def test_as_handle_coercions(sbm_graph):
+    h = as_handle(sbm_graph)
+    assert h.kind == "local" and not h.is_sharded and h.n == sbm_graph.n
+    assert as_handle(h) is h
+    pg = partition_rows(sbm_graph, 4)
+    hp = as_handle(pg)
+    assert hp.is_sharded and hp.num_shards == 4 and hp.n == sbm_graph.n
+    with pytest.raises(ValueError):
+        hp.require_mesh()
+    with pytest.raises(TypeError):
+        as_handle(42)
+
+
+def test_degree_reorder_preserves_clustering(sbm_graph):
+    """The degree_reorder hook: clustering a relabeled graph from the
+    relabeled seed gives the same diffusion (up to the permutation) and the
+    same best cut."""
+    g2, perm = degree_reorder(sbm_graph)
+    deg2 = np.asarray(g2.deg)
+    assert (np.diff(deg2) <= 0).all()   # heavy rows first, monotonically
+    seed = 5
+    ref = pr_nibble(sbm_graph, seed, eps=1e-6, alpha=0.05)
+    got = pr_nibble(g2, int(perm[seed]), eps=1e-6, alpha=0.05)
+    p_ref = np.asarray(ref.p)
+    p_got = np.asarray(got.p)
+    assert int(got.pushes) == int(ref.pushes)
+    assert int(got.iterations) == int(ref.iterations)
+    assert np.allclose(p_got[perm], p_ref, atol=1e-7)
+    sw_ref = sweep_cut_dense(sbm_graph, ref.p, 1 << 10, 1 << 14)
+    sw_got = sweep_cut_dense(g2, got.p, 1 << 10, 1 << 14)
+    assert int(sw_got.best_size) == int(sw_ref.best_size)
+    members_ref = np.sort(np.asarray(sw_ref.order)[: int(sw_ref.best_size)])
+    members_got = np.sort(perm.argsort()[
+        np.asarray(sw_got.order)[: int(sw_got.best_size)]])
+    assert (members_got == members_ref).all()
+
+
+def test_ops_graph_seam(sbm_graph):
+    """The op-layer graph seam: degrees/expansion answer for any graph-like,
+    and a sharded-only graph refuses local expansion instead of silently
+    gathering."""
+    from repro.core import ops
+    from repro.core.frontier import singleton, expand
+
+    f = singleton(5, sbm_graph.n, 64)
+    eb_ref = expand(sbm_graph, f, 256)
+    eb = ops.graph_expand(as_handle(sbm_graph), f, 256)
+    assert (np.asarray(eb.dst) == np.asarray(eb_ref.dst)).all()
+    assert int(eb.total) == int(eb_ref.total)
+
+    pg = partition_rows(sbm_graph, 4)
+    assert (ops.graph_degrees(pg) == np.asarray(sbm_graph.deg)).all()
+    # bare PartitionedCSR and sharded-only handle both refuse local expansion
+    with pytest.raises(ValueError, match="sharded-only"):
+        ops.graph_expand(pg, f, 256)
+    with pytest.raises(ValueError, match="sharded-only"):
+        ops.graph_expand(GraphHandle.from_partitioned(pg), f, 256)
+    # a sharded handle that kept its source CSR expands fine
+    h = GraphHandle.from_partitioned(pg, csr=sbm_graph)
+    eb2 = ops.graph_expand(h, f, 256)
+    assert (np.asarray(eb2.dst) == np.asarray(eb_ref.dst)).all()
+
+
+def test_pick_backend_dist_heuristic():
+    # unchanged local behavior
+    assert pick_backend(100, 64) == "dense"
+    assert pick_backend(100_000, 64) == "sparse"
+    # sharded but no budget: never forces dist
+    assert pick_backend(100_000, 64, num_shards=8) == "sparse"
+    # sharded + the dense lane state blows the chip budget: dist
+    assert pick_backend(100_000, 64, num_shards=8,
+                        chip_budget=100_000) == "dist"
+    # fits on chip: local heuristic applies
+    assert pick_backend(100, 64, num_shards=8,
+                        chip_budget=1 << 30) == "dense"
+
+
+def test_pool_label_encodes_topology():
+    key5 = ("pr_nibble", "dense", (True, 1.0), "xla", 0)
+    assert pool_label(key5) == "pr_nibble:dense:xla:(True, 1.0):b0"
+    key6 = ("pr_nibble", "dense", (True, 1.0), "xla", 0, None)
+    assert pool_label(key6) == pool_label(key5)
+    kd = ("pr_nibble", "dist", (True, 1.0), "xla", 2, ("data", 8))
+    assert pool_label(kd) == "pr_nibble:dist@data8:xla:(True, 1.0):b2"
+    # distinct topologies must produce distinct labels (no EMA aliasing)
+    kd2 = ("pr_nibble", "dist", (True, 1.0), "xla", 2, ("data", 4))
+    assert pool_label(kd) != pool_label(kd2)
+
+
+def test_dist_requests_rejected_on_local_engine(sbm_graph):
+    from repro.serve import ClusterRequest, LocalClusterEngine
+    eng = LocalClusterEngine(sbm_graph, batch_slots=2)
+    with pytest.raises(ValueError):
+        eng.submit(ClusterRequest(seed=1, backend="dist"))
+    with pytest.raises(ValueError):
+        LocalClusterEngine(sbm_graph, backend="dist")

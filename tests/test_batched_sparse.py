@@ -235,8 +235,9 @@ def test_engine_sparse_overflow_promotion(local_graph):
         assert r.pushes == int(ref.pushes)
         assert not r.overflow
     shapes = eng.stats["bucket_shapes"]
-    # (method, backend, ops_backend, B, f, e)
-    assert all(len(sh) == 6 for sh in shapes)
+    # (method, backend, ops_backend, B, f, e, topo) — topo None off-mesh
+    assert all(len(sh) == 7 for sh in shapes)
+    assert all(sh[-1] is None for sh in shapes)
 
 
 # ------------------------------------------------- (e) memory accounting
