@@ -11,11 +11,19 @@ xla reference before it is reported, so the CI ``--smoke`` gate exercises
 the full kernel path on every run.
 """
 import numpy as np
+import jax
 import jax.numpy as jnp
 
 from repro.core import ops
 from repro.kernels import ops as kops
 from .common import get_graph, emit, timeit
+
+
+def _interp_tag() -> str:
+    """";interpret=true" on non-TPU hosts, where Pallas runs in interpret
+    mode: those 10–18× pallas-vs-xla slowdowns measure the interpreter, not
+    hardware, and the artifact must say so."""
+    return ";interpret=true" if jax.default_backend() != "tpu" else ""
 
 
 def _assert_bitwise(a, b, what):
@@ -42,7 +50,8 @@ def run(smoke: bool = False):
     for backend in ("xla", "pallas"):
         us, outs[backend] = timeit(ops.scatter_add, vec, idx, vals, valid,
                                    backend=backend, prime=not smoke)
-        emit(f"ops/scatter_add_{backend}", us, f"n={n};m={m}")
+        tag = _interp_tag() if backend == "pallas" else ""
+        emit(f"ops/scatter_add_{backend}", us, f"n={n};m={m}{tag}")
     _assert_bitwise(outs["xla"], outs["pallas"], "scatter_add")
 
     # segment_merge — one sv_merge_add of a sparse round
@@ -52,8 +61,9 @@ def run(smoke: bool = False):
     for backend in ("xla", "pallas"):
         us, outs[backend] = timeit(ops.segment_merge, ids, mvals, n, cap,
                                    backend=backend, prime=not smoke)
+        tag = _interp_tag() if backend == "pallas" else ""
         emit(f"ops/segment_merge_{backend}", us,
-             f"stream={int(ids.shape[0])};cap={cap}")
+             f"stream={int(ids.shape[0])};cap={cap}{tag}")
     _assert_bitwise(outs["xla"], outs["pallas"], "segment_merge")
 
     # prefix_sum — the sweep's int32 difference-array scan
@@ -61,7 +71,8 @@ def run(smoke: bool = False):
     for backend in ("xla", "pallas"):
         us, outs[backend] = timeit(ops.prefix_sum, x, backend=backend,
                                    prime=not smoke)
-        emit(f"ops/prefix_sum_i32_{backend}", us, f"n={m}")
+        tag = _interp_tag() if backend == "pallas" else ""
+        emit(f"ops/prefix_sum_i32_{backend}", us, f"n={m}{tag}")
     _assert_bitwise(outs["xla"], outs["pallas"], "prefix_sum")
 
     # diffusion_spmv — saturated round on the hybrid ELL layout (allclose op)
@@ -72,10 +83,15 @@ def run(smoke: bool = False):
         us, outs[backend] = timeit(ops.diffusion_spmv, nbr, wgt, es, ed, ew,
                                    p, halo=2, backend=backend,
                                    prime=not smoke)
-        emit(f"ops/diffusion_spmv_{backend}", us, f"n={n_pad};W={W}")
+        tag = _interp_tag() if backend == "pallas" else ""
+        emit(f"ops/diffusion_spmv_{backend}", us, f"n={n_pad};W={W}{tag}")
     np.testing.assert_allclose(np.asarray(outs["xla"]),
                                np.asarray(outs["pallas"]), rtol=1e-5,
                                atol=1e-6)
+    # artifact-level flag, mirrored per-row above: BENCH_ops.json numbers
+    # from an interpret-mode host must never be read as TPU numbers
+    return dict(default_backend=jax.default_backend(),
+                interpret=jax.default_backend() != "tpu")
 
 
 if __name__ == "__main__":

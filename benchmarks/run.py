@@ -18,7 +18,13 @@ accumulate across runs alongside the serving latencies.
 import argparse
 import json
 import sys
+import time
 import traceback
+
+# Versioned artifact header (satellite of the tracing PR): accumulated
+# BENCH_<suite>.json files must be comparable across PRs without guessing
+# their vintage.  Bump when the artifact shape changes.
+BENCH_SCHEMA = "repro.bench/v1"
 
 
 def main() -> None:
@@ -65,7 +71,8 @@ def main() -> None:
             failures.append(k)
             drain_rows()
             continue
-        artifact = dict(rows=drain_rows())
+        artifact = dict(schema=BENCH_SCHEMA, suite=k, smoke=smoke,
+                        generated_unix=time.time(), rows=drain_rows())
         if isinstance(ret, dict):
             artifact.update(ret)
         path = f"BENCH_{k}.json"

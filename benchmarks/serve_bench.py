@@ -12,6 +12,14 @@ Emits the usual `name,us_per_call,derived` CSV rows (us = p50 latency) and
 returns a JSON-able dict that `benchmarks/run.py` writes to
 ``BENCH_serve.json`` — the artifact CI uploads so the serving-latency
 trajectory accumulates across PRs.
+
+``--trace`` additionally flight-records every request through a
+:class:`repro.serve.tracing.Tracer` and writes ``BENCH_trace.json``:
+Chrome trace events (load in Perfetto), a per-request phase-attribution
+table (queued / pool_queue / resident / sweep / deliver, with coverage =
+how much of the measured wall latency the spans explain), the
+deadline-miss postmortems from the telemetry snapshot, and a purity probe
+asserting the traced stream is bit-identical to an untraced one.
 """
 from __future__ import annotations
 
@@ -19,7 +27,9 @@ import time
 
 import numpy as np
 
-from repro.serve import AsyncClusterEngine, ClusterRequest
+from repro.serve import (AsyncClusterEngine, ClusterRequest,
+                         LocalClusterEngine, MetricsRegistry, Tracer)
+from repro.serve.tracing import TRACE_SCHEMA
 from .common import get_graph, emit
 
 
@@ -32,15 +42,18 @@ def _percentiles(lat_ms):
 
 def _run_lane(graph, backend: str, n_requests: int, mean_gap_s: float,
               deadline_ms: float, batch_slots: int, caps: dict,
-              seed: int = 0) -> dict:
+              seed: int = 0, tracer=None, telemetry=None) -> dict:
     """Play one Poisson-arrival stream at a fresh scheduler; returns the
-    latency/miss summary for the BENCH_serve.json artifact."""
+    latency/miss summary for the BENCH_serve.json artifact.  With a
+    ``tracer`` the summary also carries per-request phase attribution,
+    Chrome trace events, and the telemetry postmortems."""
     rng = np.random.default_rng(seed)
     seeds = rng.choice(np.flatnonzero(np.asarray(graph.deg) > 0),
                        size=n_requests).astype(np.int32)
     gaps = rng.exponential(mean_gap_s, size=n_requests)
     sched = AsyncClusterEngine(graph, batch_slots=batch_slots,
                                max_queue=4 * n_requests, backend=backend,
+                               tracer=tracer, telemetry=telemetry,
                                **caps)
     futs = []
     with sched:
@@ -70,10 +83,49 @@ def _run_lane(graph, backend: str, n_requests: int, mean_gap_s: float,
         throughput_rps=n_requests / wall_s,
         backend=backend,
     )
+    if tracer is not None:
+        recs = []
+        for f, r in zip(futs, results):
+            s = f.trace.summary()
+            s["deadline_missed"] = bool(r.deadline_missed)
+            # coverage against the *scheduler-measured* wall latency, the
+            # number the artifact reports (the root span tracks it to µs)
+            if f.latency_ms:
+                s["coverage"] = min(1.0, sum(s["phases_ms"].values())
+                                    / f.latency_ms)
+            recs.append(s)
+        out["requests"] = recs
+        covs = [s["coverage"] for s in recs if s["coverage"] is not None]
+        out["coverage_min"] = min(covs) if covs else None
+        out["coverage_mean"] = (sum(covs) / len(covs)) if covs else None
+        out["events"] = tracer.chrome_trace()
+        out["spans_dropped"] = tracer.dropped
+        out["postmortems"] = telemetry.postmortems()
     return out
 
 
-def run(smoke: bool = False) -> dict:
+def _purity_probe(graph, batch_slots: int, caps: dict, n: int = 8) -> dict:
+    """Deterministic traced-vs-untraced comparison (guarantee #8): the same
+    request list through two fresh engines, one flight-recorded, one not —
+    every result field must agree bitwise.  Single-threaded and deadline-
+    free so the comparison is exact, not timing-dependent."""
+    rng = np.random.default_rng(7)
+    seeds = rng.choice(np.flatnonzero(np.asarray(graph.deg) > 0), size=n)
+    reqs = [ClusterRequest(seed=int(s), alpha=0.05, eps=1e-4) for s in seeds]
+    traced = LocalClusterEngine(graph, batch_slots=batch_slots,
+                                tracer=Tracer(), **caps).run(reqs)
+    plain = LocalClusterEngine(graph, batch_slots=batch_slots,
+                               **caps).run(reqs)
+    identical = all(
+        a.conductance == b.conductance and a.size == b.size
+        and a.volume == b.volume and a.support == b.support
+        and a.pushes == b.pushes and a.iterations == b.iterations
+        and np.array_equal(a.cluster, b.cluster)
+        for a, b in zip(traced, plain))
+    return dict(n_requests=n, bit_identical=identical)
+
+
+def run(smoke: bool = False, trace: bool = False) -> dict:
     name = "sbm-planted" if smoke else "randLocal-50k"
     graph = get_graph(name)
     n_requests = 16 if smoke else 64
@@ -82,21 +134,58 @@ def run(smoke: bool = False) -> dict:
     # under the burst (the miss path must exercise in CI), loose enough that
     # warm dense ticks hit — both outcomes are *reported*, never asserted
     deadline_ms = 1000.0 if smoke else 250.0
+    batch_slots = 4 if smoke else 8
     caps = (dict(cap_f=1 << 10, cap_e=1 << 14, cap_n=1 << 10,
                  sweep_cap_e=1 << 14) if smoke else {})
     artifact = dict(graph=name, smoke=smoke, lanes={})
+    traced_lanes = {}
     for backend in ("dense", "sparse"):
+        tracer = Tracer(capacity=1 << 16) if trace else None
+        telemetry = MetricsRegistry() if trace else None
         lane = _run_lane(graph, backend, n_requests, mean_gap_s, deadline_ms,
-                         batch_slots=4 if smoke else 8, caps=caps)
+                         batch_slots=batch_slots, caps=caps,
+                         tracer=tracer, telemetry=telemetry)
+        if trace:
+            # the trace payload goes to BENCH_trace.json, not BENCH_serve
+            traced_lanes[backend] = {
+                k: lane.pop(k) for k in ("requests", "events", "postmortems",
+                                         "coverage_min", "coverage_mean",
+                                         "spans_dropped")}
+            traced_lanes[backend]["deadline_miss_rate"] = \
+                lane["deadline_miss_rate"]
         artifact["lanes"][backend] = lane
         emit(f"serve/{name}/{backend}_poisson_B={n_requests}",
              lane["p50_ms"] * 1e3,
              f"p95_ms={lane['p95_ms']:.1f};p99_ms={lane['p99_ms']:.1f};"
              f"miss_rate={lane['deadline_miss_rate']:.3f};"
              f"rps={lane['throughput_rps']:.1f}")
+    if trace:
+        import json
+        # one Perfetto-loadable event stream: lanes separated by pid
+        events = []
+        for pid, (backend, tl) in enumerate(traced_lanes.items()):
+            for ev in tl.pop("events"):
+                events.append(dict(ev, pid=pid))
+        trace_artifact = dict(
+            schema=TRACE_SCHEMA, suite="serve_trace", smoke=smoke,
+            generated_unix=time.time(), graph=name,
+            deadline_ms=deadline_ms,
+            purity=_purity_probe(graph, batch_slots, caps),
+            lanes=traced_lanes,
+            traceEvents=events)
+        with open("BENCH_trace.json", "w") as f:
+            json.dump(trace_artifact, f, indent=2, sort_keys=True)
+        print("wrote BENCH_trace.json", flush=True)
+        artifact["trace_artifact"] = "BENCH_trace.json"
     return artifact
 
 
 if __name__ == "__main__":
+    import argparse
     import json
-    print(json.dumps(run(), indent=2))
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--trace", action="store_true",
+                    help="flight-record every request; write BENCH_trace.json")
+    args = ap.parse_args()
+    print(json.dumps(run(smoke=args.smoke, trace=args.trace), indent=2))

@@ -1,0 +1,129 @@
+#!/usr/bin/env python
+"""Serving-latency regression gate over ``BENCH_serve.json`` smoke numbers.
+
+Usage::
+
+    python scripts/check_bench_regression.py BENCH_serve.json
+    python scripts/check_bench_regression.py BENCH_serve.json --update
+
+Compares each lane's ``deadline_miss_rate`` and ``p99_ms`` against the
+committed baseline (``benchmarks/baselines/serve_smoke.json``) with
+tolerance bands sized for shared CI runners — the gate catches *collapses*
+(a lane that stops meeting deadlines, a p99 that blows up by multiples),
+not noise:
+
+  * miss rate may exceed the baseline by at most ``miss_rate_slack``
+    (absolute, default 0.25);
+  * p99 may exceed the baseline by at most ``p99_ratio``× (default 4×).
+
+Getting *better* never fails the gate; refresh the committed baseline with
+``--update`` when an improvement should become the new floor.  Exits 0 on
+pass, 1 on regression, 2 on unusable input (missing file / lane mismatch) —
+CI treats nonzero as failure either way.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+DEFAULT_BASELINE = "benchmarks/baselines/serve_smoke.json"
+MISS_RATE_SLACK = 0.25   # absolute headroom over baseline miss rate
+P99_RATIO = 4.0          # multiplicative headroom over baseline p99
+
+
+def extract(artifact: dict) -> dict:
+    """lane → the two gated numbers."""
+    lanes = artifact.get("lanes", {})
+    return {name: dict(deadline_miss_rate=lane["deadline_miss_rate"],
+                       p99_ms=lane["p99_ms"])
+            for name, lane in lanes.items()}
+
+
+def compare(fresh: dict, baseline: dict, miss_rate_slack: float,
+            p99_ratio: float) -> list:
+    failures = []
+    for lane, base in baseline["lanes"].items():
+        cur = fresh.get(lane)
+        if cur is None:
+            failures.append(f"lane {lane!r}: present in baseline, missing "
+                            f"from the fresh artifact")
+            continue
+        miss_cap = base["deadline_miss_rate"] + miss_rate_slack
+        if cur["deadline_miss_rate"] > miss_cap:
+            failures.append(
+                f"lane {lane!r}: deadline_miss_rate "
+                f"{cur['deadline_miss_rate']:.3f} > {miss_cap:.3f} "
+                f"(baseline {base['deadline_miss_rate']:.3f} "
+                f"+ {miss_rate_slack} slack)")
+        p99_cap = base["p99_ms"] * p99_ratio
+        if cur["p99_ms"] > p99_cap:
+            failures.append(
+                f"lane {lane!r}: p99_ms {cur['p99_ms']:.1f} > "
+                f"{p99_cap:.1f} (baseline {base['p99_ms']:.1f} "
+                f"× {p99_ratio})")
+    return failures
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("fresh", nargs="?", default="BENCH_serve.json",
+                    help="freshly produced serve artifact")
+    ap.add_argument("--baseline", default=DEFAULT_BASELINE)
+    ap.add_argument("--miss-rate-slack", type=float,
+                    default=MISS_RATE_SLACK)
+    ap.add_argument("--p99-ratio", type=float, default=P99_RATIO)
+    ap.add_argument("--update", action="store_true",
+                    help="rewrite the baseline from the fresh artifact")
+    args = ap.parse_args()
+
+    try:
+        with open(args.fresh) as f:
+            fresh_artifact = json.load(f)
+    except OSError as e:
+        print(f"cannot read fresh artifact {args.fresh}: {e}",
+              file=sys.stderr)
+        return 2
+    fresh = extract(fresh_artifact)
+    if not fresh:
+        print(f"{args.fresh} has no lanes to gate", file=sys.stderr)
+        return 2
+
+    if args.update:
+        baseline = dict(schema="repro.bench.baseline/v1",
+                        source=args.fresh,
+                        smoke=fresh_artifact.get("smoke"),
+                        graph=fresh_artifact.get("graph"),
+                        lanes=fresh)
+        with open(args.baseline, "w") as f:
+            json.dump(baseline, f, indent=2, sort_keys=True)
+            f.write("\n")
+        print(f"baseline updated: {args.baseline}")
+        return 0
+
+    try:
+        with open(args.baseline) as f:
+            baseline = json.load(f)
+    except OSError as e:
+        print(f"cannot read baseline {args.baseline}: {e} "
+              f"(generate one with --update)", file=sys.stderr)
+        return 2
+
+    failures = compare(fresh, baseline, args.miss_rate_slack, args.p99_ratio)
+    for lane, cur in sorted(fresh.items()):
+        base = baseline["lanes"].get(lane, {})
+        print(f"lane {lane}: miss_rate {cur['deadline_miss_rate']:.3f} "
+              f"(baseline {base.get('deadline_miss_rate', float('nan')):.3f})"
+              f", p99 {cur['p99_ms']:.1f} ms "
+              f"(baseline {base.get('p99_ms', float('nan')):.1f} ms)")
+    if failures:
+        print("\nREGRESSION:", file=sys.stderr)
+        for msg in failures:
+            print(f"  {msg}", file=sys.stderr)
+        return 1
+    print("serve bench within tolerance of baseline")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

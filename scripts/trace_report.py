@@ -1,0 +1,171 @@
+#!/usr/bin/env python
+"""Offline attribution report over a ``BENCH_trace.json`` flight recording.
+
+Usage::
+
+    python scripts/trace_report.py BENCH_trace.json [--top 5]
+
+Renders, per lane (dense/sparse):
+
+  * the per-request **attribution table** — latency, coverage (how much of
+    the measured wall latency the recorded phases explain), and the
+    per-phase breakdown (queued / pool_queue / resident / sweep / deliver);
+  * the **top-k slowest** requests with their span trees, reconstructed by
+    interval-nesting the Chrome trace events (the same containment rule
+    Perfetto renders with);
+  * **per-pool rollups** from the tick spans — ticks, total/mean tick wall
+    time, mean occupancy.
+
+The input is written by ``python -m benchmarks.serve_bench --trace`` (see
+docs/architecture.md, "Observability"); the same file loads directly in
+https://ui.perfetto.dev for the interactive view.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+from collections import defaultdict
+
+PHASES = ("queued", "pool_queue", "resident", "sweep", "deliver")
+
+
+def _fmt_ms(v):
+    return "-" if v is None else f"{v:9.3f}"
+
+
+def attribution_table(lane_name: str, lane: dict) -> str:
+    reqs = lane.get("requests", [])
+    lines = [f"== lane {lane_name} — attribution "
+             f"(miss_rate={lane.get('deadline_miss_rate', 0):.3f}, "
+             f"coverage min={lane.get('coverage_min')!r} "
+             f"mean={lane.get('coverage_mean')!r}) =="]
+    hdr = (f"{'rid':>5} {'status':>9} {'miss':>4} {'latency_ms':>10} "
+           f"{'cov':>6} " + " ".join(f"{p:>10}" for p in PHASES))
+    lines.append(hdr)
+    lines.append("-" * len(hdr))
+    totals = defaultdict(float)
+    for r in reqs:
+        ph = r.get("phases_ms", {})
+        for p in PHASES:
+            totals[p] += ph.get(p, 0.0)
+        cov = r.get("coverage")
+        lines.append(
+            f"{r['rid']:>5} {str(r.get('status')):>9} "
+            f"{'Y' if r.get('deadline_missed') else '.':>4} "
+            f"{r['latency_ms']:>10.3f} "
+            f"{(f'{cov:.1%}' if cov is not None else '-'):>6} "
+            + " ".join(f"{ph.get(p, 0.0):>10.3f}" for p in PHASES))
+    if reqs:
+        lines.append("-" * len(hdr))
+        lines.append(f"{'sum':>5} {'':>9} {'':>4} {'':>10} {'':>6} "
+                     + " ".join(f"{totals[p]:>10.3f}" for p in PHASES))
+    return "\n".join(lines)
+
+
+def _nest_events(events):
+    """Interval-nest complete ("X") events per (pid, tid): an event is a
+    child of the tightest enclosing one, the rule trace viewers render by."""
+    by_track = defaultdict(list)
+    for ev in events:
+        if ev.get("ph") == "X":
+            by_track[(ev.get("pid", 0), ev.get("tid", 0))].append(ev)
+    trees = {}
+    for track, evs in by_track.items():
+        evs.sort(key=lambda e: (e["ts"], -e.get("dur", 0)))
+        roots, stack = [], []
+        for ev in evs:
+            node = dict(ev, children=[])
+            while stack and ev["ts"] + ev.get("dur", 0) > \
+                    stack[-1]["ts"] + stack[-1].get("dur", 0) + 1e-9:
+                stack.pop()
+            (stack[-1]["children"] if stack else roots).append(node)
+            stack.append(node)
+        trees[track] = roots
+    return trees
+
+
+def _render_tree(nodes, indent=0, out=None):
+    out = [] if out is None else out
+    for nd in nodes:
+        extras = {k: v for k, v in nd.get("args", {}).items() if k != "rid"}
+        out.append("  " * indent
+                   + f"{nd['name']:<12} {nd.get('dur', 0) / 1e3:9.3f} ms"
+                   + (f"  {extras}" if extras else ""))
+        _render_tree(nd["children"], indent + 1, out)
+    return out
+
+
+def slowest_requests(lane_name: str, lane: dict, events, pid: int,
+                     top: int) -> str:
+    reqs = sorted(lane.get("requests", []),
+                  key=lambda r: -(r.get("latency_ms") or 0.0))[:top]
+    trees = _nest_events(events)
+    lines = [f"== lane {lane_name} — top {len(reqs)} slowest =="]
+    for r in reqs:
+        lines.append(f"-- rid {r['rid']}  {r['latency_ms']:.3f} ms  "
+                     f"status={r.get('status')}"
+                     + ("  DEADLINE MISSED" if r.get("deadline_missed")
+                        else ""))
+        roots = trees.get((pid, r["rid"] + 1), [])
+        lines.extend(_render_tree(roots, indent=1) or ["  (no spans)"])
+    return "\n".join(lines)
+
+
+def pool_rollups(events) -> str:
+    agg = defaultdict(lambda: dict(ticks=0, dur=0.0, occ=0.0))
+    for ev in events:
+        if ev.get("ph") == "X" and ev.get("name") == "tick":
+            pool = ev.get("args", {}).get("pool", "?")
+            a = agg[pool]
+            a["ticks"] += 1
+            a["dur"] += ev.get("dur", 0) / 1e3
+            a["occ"] += ev.get("args", {}).get("occupancy", 0)
+    lines = ["== per-pool tick rollups =="]
+    hdr = f"{'pool':<48} {'ticks':>6} {'total_ms':>10} {'mean_ms':>9} " \
+          f"{'mean_occ':>8}"
+    lines += [hdr, "-" * len(hdr)]
+    for pool, a in sorted(agg.items(), key=lambda kv: -kv[1]["dur"]):
+        lines.append(f"{pool:<48} {a['ticks']:>6} {a['dur']:>10.3f} "
+                     f"{a['dur'] / a['ticks']:>9.3f} "
+                     f"{a['occ'] / a['ticks']:>8.2f}")
+    return "\n".join(lines)
+
+
+def report(artifact: dict, top: int = 5) -> str:
+    events = artifact.get("traceEvents", [])
+    sections = [f"trace report — schema={artifact.get('schema')} "
+                f"graph={artifact.get('graph')} smoke={artifact.get('smoke')}"
+                f" purity={artifact.get('purity')}"]
+    for pid, (lane_name, lane) in enumerate(
+            artifact.get("lanes", {}).items()):
+        sections.append(attribution_table(lane_name, lane))
+        sections.append(slowest_requests(
+            lane_name, lane, [e for e in events if e.get("pid") == pid],
+            pid, top))
+        pms = lane.get("postmortems", [])
+        if pms:
+            sections.append(f"== lane {lane_name} — {len(pms)} deadline-miss "
+                            f"postmortem(s) (span trees in the artifact) ==")
+    sections.append(pool_rollups(events))
+    return "\n\n".join(sections)
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("path", nargs="?", default="BENCH_trace.json")
+    ap.add_argument("--top", type=int, default=5,
+                    help="slowest requests to expand per lane")
+    args = ap.parse_args()
+    try:
+        with open(args.path) as f:
+            artifact = json.load(f)
+    except OSError as e:
+        print(f"cannot read {args.path}: {e}", file=sys.stderr)
+        return 2
+    print(report(artifact, top=args.top))
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -240,6 +240,24 @@ def _retry_sizes(k: int, B: int) -> int:
     return min(next_pow2(max(k, 1)), next_pow2(B))
 
 
+_annotate = None
+
+
+def _trace_annotate(name, **attrs):
+    """Forward to the serving layer's ambient tracing hook
+    (:func:`repro.serve.tracing.annotate`) — a no-op unless a Tracer scope
+    is active on this thread.  Imported lazily at first call: core must not
+    import ``repro.serve`` at module time (serve imports core back), and the
+    serve layer is optional for pure-core users."""
+    global _annotate
+    if _annotate is None:
+        try:
+            from repro.serve.tracing import annotate as _annotate
+        except Exception:                       # serve layer unavailable
+            _annotate = lambda name, **attrs: None
+    _annotate(name, **attrs)
+
+
 def _bucketed_retry(B, dispatch, advance, exhausted, outputs, ovf_out):
     """Shared per-seed retry ladder for the host drivers.
 
@@ -259,6 +277,15 @@ def _bucketed_retry(B, dispatch, advance, exhausted, outputs, ovf_out):
         fields, bucket = dispatch(sel)
         buckets.append(bucket)
         o = np.asarray(fields["overflow"])[:k]
+        # Paper-native work measures for an active trace scope (serve layer):
+        # one event per ladder dispatch — bucket shape, lanes served,
+        # overflow count, total pushes, dist exchange volume when present.
+        obs = dict(bucket=tuple(int(b) for b in bucket), lanes=int(k),
+                   hop=len(buckets) - 1, overflowed=int(o.sum()))
+        for extra in ("pushes", "exchanged"):
+            if extra in fields:
+                obs[extra] = int(np.asarray(fields[extra])[:k].sum())
+        _trace_annotate("ladder_dispatch", **obs)
         final = (not o.any()) or exhausted()
         done = pending if final else pending[~o]
         take = slice(None) if final else ~o

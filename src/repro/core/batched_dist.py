@@ -33,7 +33,12 @@ shared :func:`repro.core.batched._bucketed_retry` ladder — now also
 laddering the per-owner exchange-bucket capacity ``cap_x`` (clamped at
 ``cap_e``).  Overflow is exact: local frontier (``cap_f``), local edge
 workspace (``cap_e``), or any per-owner bucket (``cap_x``) exceeding
-capacity flags the lane.
+capacity flags the lane.  Sharing ``_bucketed_retry`` also means dist
+ladder dispatches annotate an active trace scope
+(:func:`repro.serve.tracing.annotate`) with the paper-native work measures
+— including the ``exchanged`` cross-shard contribution volume — and the
+engine's dist pools surface the same counter per lane in their harvest
+``lane_obs`` events.
 
 The module also exposes the step-wise lane kernels
 (:func:`dist_lane_kernels`: init / inject / step) that

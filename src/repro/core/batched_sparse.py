@@ -35,7 +35,11 @@ Layers:
     results are bit-identical to the single-seed sparse driver.
 
 Overflow/retry contract and recompile boundaries are those documented in
-core/batched.py; the only new static axis is ``cap_v``.  The dense-vs-sparse
+core/batched.py; the only new static axis is ``cap_v``.  Because the retry
+loop is the shared :func:`repro.core.batched._bucketed_retry`, sparse
+ladder dispatches annotate an active trace scope
+(:func:`repro.serve.tracing.annotate` — bucket hops, overflow counts,
+pushes) exactly like the dense driver's, with no serve import here.  The dense-vs-sparse
 serving decision (:func:`pick_backend`) and the per-lane memory accounting
 (:func:`sparse_lane_footprint`) live here so the engine and the benchmarks
 agree on one definition.

@@ -3,8 +3,10 @@ from .cluster_engine import (ClusterRequest, ClusterResult,
                              LocalClusterEngine, UnknownTicket)
 from .scheduler import AsyncClusterEngine, ClusterFuture, QueueFull
 from .telemetry import MetricsRegistry, pool_label
+from .tracing import RequestTrace, Span, Tracer, annotate
 
 __all__ = ["ServeConfig", "generate", "batched_serve",
            "ClusterRequest", "ClusterResult", "LocalClusterEngine",
            "UnknownTicket", "AsyncClusterEngine", "ClusterFuture",
-           "QueueFull", "MetricsRegistry", "pool_label"]
+           "QueueFull", "MetricsRegistry", "pool_label",
+           "RequestTrace", "Span", "Tracer", "annotate"]

@@ -97,6 +97,8 @@ from repro.core.hk_pr import hk_pr_init, hk_pr_round, hk_pr_alive
 from repro.core.sweep import sweep_cut_dense, sweep_cut_sparse
 from repro.core.batched import rounds_remaining_hint, hk_rounds_remaining
 from repro.core.batched_sparse import pick_backend
+from repro.serve.telemetry import EMA, pool_label
+from repro.serve.tracing import RequestTrace, Tracer
 
 __all__ = ["ClusterRequest", "ClusterResult", "LocalClusterEngine",
            "UnknownTicket"]
@@ -292,7 +294,9 @@ class _Pool:
         # Cost-model observables (serve/scheduler.py): EMA of measured tick
         # wall time, fed by LocalClusterEngine.tick_pool.  None until the
         # first tick (which typically includes this shape's compile).
-        self.cost_ema: Optional[float] = None
+        # Same telemetry.EMA the registry exports, so alpha is configured in
+        # exactly one place (engine.cost_ema_alpha).
+        self._cost = EMA(engine.cost_ema_alpha)
         self.ticks = 0
         engine.stats["pools_created"] += 1
         engine.stats["bucket_shapes"].add(
@@ -306,8 +310,12 @@ class _Pool:
     def note_tick(self, seconds: float) -> None:
         """Fold one measured refill+step+harvest wall time into the EMA."""
         self.ticks += 1
-        self.cost_ema = (seconds if self.cost_ema is None
-                         else 0.7 * self.cost_ema + 0.3 * seconds)
+        self._cost.update(seconds)
+
+    @property
+    def cost_ema(self) -> Optional[float]:
+        """EMA of measured tick wall time (None before the first tick)."""
+        return self._cost.value
 
     def occupancy(self) -> int:
         """Active lanes (injected, not yet harvested)."""
@@ -377,6 +385,10 @@ class _Pool:
             else:
                 self.state = _hk_inject(self.state, lane, seed, n, self.cap_f)
             self.engine.stats["injections"] += 1
+            rt = self.engine._rt.get(idx)
+            if rt is not None:
+                rt.phase("resident", lane=i, bucket=self.bucket)
+                rt.event("injected", lane=i, seed=req.seed)
 
     def step(self) -> None:
         active = np.array([l is not None for l in self.lane])
@@ -424,13 +436,40 @@ class _Pool:
         else:
             count = np.asarray(st.frontier.count)
             finished = (count == 0) | ovf | np.asarray(st.done)
+        # Per-lane request annotations (traced runs only — the pushes pull
+        # is an extra device→host sync we don't pay untraced): the batched
+        # state already carries the paper-native work measures.
+        if self.engine.tracer is not None:
+            pushes = np.asarray(st.pushes)
+            exch = (np.asarray(st.exchanged)
+                    if self.backend == "dist" else None)
+            for i, slot in enumerate(self.lane):
+                if slot is None:
+                    continue
+                rt = self.engine._rt.get(slot[0])
+                if rt is not None:
+                    obs = dict(frontier=int(count[i]),
+                               pushes=int(pushes[i]),
+                               overflow=bool(ovf[i]),
+                               finished=bool(finished[i]))
+                    if exch is not None:
+                        obs["exchanged"] = int(exch[i])
+                    rt.event("lane_obs", **obs)
         for i, slot in enumerate(self.lane):
             if slot is None or not finished[i]:
                 continue
             idx, req = slot
             self.lane[i] = None
+            rt = self.engine._rt.get(idx)
             if ovf[i] and self.engine._promote(idx, req, self.bucket):
+                if rt is not None:
+                    rt.event("promoted", from_bucket=self.bucket,
+                             to_bucket=self.bucket + 1)
                 continue
+            if rt is not None:
+                rt.event("harvest", frontier=int(count[i]),
+                         overflow=bool(ovf[i]))
+                rt.phase("sweep", bucket=self.bucket)
             self.engine._complete(idx, self._finalize(i, req, bool(ovf[i])))
 
     def force_finalize(self, i: int) -> ClusterResult:
@@ -441,6 +480,10 @@ class _Pool:
         idx, req = self.lane[i]
         self.lane[i] = None
         ovf = bool(np.asarray(self.state.overflow)[i])
+        rt = self.engine._rt.get(idx)
+        if rt is not None:
+            rt.event("expired", lane=i, bucket=self.bucket)
+            rt.phase("sweep", bucket=self.bucket, partial=True)
         return self._finalize(i, req, ovf)
 
     def _finalize(self, i: int, req: ClusterRequest,
@@ -518,7 +561,9 @@ class LocalClusterEngine:
                  lru_pools: int = 4, cap_v: int = 1 << 12,
                  backend: str = "auto", sparse_ratio: int = 4,
                  ops_backend: str = "auto", cap_x: int = 1 << 12,
-                 dist_chip_budget: Optional[int] = None):
+                 dist_chip_budget: Optional[int] = None,
+                 tracer: Optional[Tracer] = None,
+                 cost_ema_alpha: float = 0.3):
         """``graph`` is any graph-like — a resident ``CSRGraph`` or a
         :class:`~repro.graphs.handle.GraphHandle` (possibly sharded over a
         mesh, which unlocks the ``dist`` lane pools).
@@ -535,7 +580,14 @@ class LocalClusterEngine:
         to the lane type; requests may pin their own via
         ``ClusterRequest.ops_backend``.  Results are bit-identical across
         kernel backends *and* across lane backends for the dense/dist pair,
-        so mixing them in one stream is safe."""
+        so mixing them in one stream is safe.
+
+        ``tracer`` (a :class:`repro.serve.tracing.Tracer`, default None =
+        tracing off) records a span tree per request and per-tick pool
+        spans; tracing only *observes* state the engine computed, so traced
+        results are bit-identical to untraced ones (docs/algorithms.md,
+        guarantee #8).  ``cost_ema_alpha`` is the smoothing factor of every
+        pool's tick-cost EMA (the scheduler's cost model)."""
         if backend not in ("auto", "dense", "sparse", "dist"):
             raise ValueError(f"unknown backend: {backend!r}")
         self.handle = as_handle(graph)
@@ -566,6 +618,11 @@ class LocalClusterEngine:
                                 bucket_shapes=set())
         self._results: Dict[int, ClusterResult] = {}
         self._next_idx = 0
+        self.tracer = tracer
+        self.cost_ema_alpha = cost_ema_alpha
+        # ticket → RequestTrace for in-flight traced requests; traces are
+        # finished and dropped at result pickup
+        self._rt: Dict[int, RequestTrace] = {}
 
     @property
     def graph(self) -> CSRGraph:
@@ -646,6 +703,9 @@ class LocalClusterEngine:
             self.pools[key] = pool
         self.pools.move_to_end(key)
         pool.queue.append((idx, req))   # before evict: a pool with work is safe
+        rt = self._rt.get(idx)
+        if rt is not None:
+            rt.phase("pool_queue", pool=pool_label(key), bucket=bucket)
         self._evict_idle()
 
     def _promote(self, idx: int, req: ClusterRequest, bucket: int) -> bool:
@@ -660,6 +720,12 @@ class LocalClusterEngine:
     def _complete(self, idx: int, res: ClusterResult) -> None:
         self._results[idx] = res
         self.stats["completed"] += 1
+        rt = self._rt.get(idx)
+        if rt is not None:
+            # inf conductance (empty partial harvest) is not valid JSON
+            phi = res.conductance if math.isfinite(res.conductance) else None
+            rt.phase("deliver", conductance=phi, size=res.size,
+                     pushes=res.pushes)
 
     def _evict_idle(self) -> None:
         while len(self.pools) > self.lru_pools:
@@ -672,11 +738,22 @@ class LocalClusterEngine:
 
     # -- public API ----------------------------------------------------------
 
-    def submit(self, req: ClusterRequest) -> int:
-        """Queue a request; returns a ticket usable with :meth:`result`."""
+    def submit(self, req: ClusterRequest,
+               _trace: Optional[RequestTrace] = None) -> int:
+        """Queue a request; returns a ticket usable with :meth:`result`.
+
+        ``_trace`` lets the async layer hand down the request's
+        :class:`~repro.serve.tracing.RequestTrace` (already carrying its
+        scheduler-side ``queued`` phase); without one, a traced engine opens
+        a fresh trace at submission."""
         self._pool_key(req, 0)  # validate method early
         idx = self._next_idx
         self._next_idx += 1
+        rt = _trace
+        if rt is None and self.tracer is not None:
+            rt = self.tracer.request(seed=req.seed, method=req.method)
+        if rt is not None:
+            self._rt[idx] = rt
         self._enqueue(idx, req, 0)
         return idx
 
@@ -695,11 +772,28 @@ class LocalClusterEngine:
         pool = self.pools.get(key)
         if pool is None or not pool.has_work():
             return None
-        t0 = time.perf_counter()
-        pool.refill()
-        pool.step()
-        pool.harvest()    # device→host sync: the measured time is honest
-        dt = time.perf_counter() - t0
+        tr = self.tracer
+        if tr is None:
+            t0 = time.perf_counter()
+            pool.refill()
+            pool.step()
+            pool.harvest()  # device→host sync: the measured time is honest
+            dt = time.perf_counter() - t0
+        else:
+            label = pool_label(key)
+            with tr.span("tick", cat="pool", pool=label,
+                         occupancy=pool.occupancy(), queued=len(pool.queue),
+                         cost_ema=pool.cost_ema) as tick_sid, \
+                    tr.scope(parent=tick_sid), \
+                    tr.device_span(f"tick:{label}"):
+                t0 = time.perf_counter()
+                with tr.span("refill", cat="pool", parent=tick_sid):
+                    pool.refill()
+                with tr.span("step", cat="pool", parent=tick_sid):
+                    pool.step()
+                with tr.span("harvest", cat="pool", parent=tick_sid):
+                    pool.harvest()
+                dt = time.perf_counter() - t0
         pool.note_tick(dt)
         if key in self.pools:   # harvest may promote+evict this very pool
             self.pools.move_to_end(key)
@@ -746,7 +840,9 @@ class LocalClusterEngine:
         ``dict.pop`` KeyError."""
         status = self._ticket_status(ticket)
         if status == "ready":
-            return self._results.pop(ticket)
+            res = self._results.pop(ticket)
+            self._finish_trace(ticket, res)
+            return res
         if status == "pending":
             raise UnknownTicket(
                 f"ticket {ticket} is still in flight — call poll()/drain() "
@@ -780,12 +876,26 @@ class LocalClusterEngine:
         :meth:`result`.  ``None`` pops everything."""
         if tickets is None:
             out, self._results = self._results, {}
-            return out
-        tickets = set(tickets)
-        out = {t: r for t, r in self._results.items() if t in tickets}
-        for t in out:
-            del self._results[t]
+        else:
+            tickets = set(tickets)
+            out = {t: r for t, r in self._results.items() if t in tickets}
+            for t in out:
+                del self._results[t]
+        for t, r in out.items():
+            self._finish_trace(t, r)
         return out
+
+    def _finish_trace(self, ticket: int, res: ClusterResult) -> None:
+        """Close a picked-up request's trace (the ``deliver`` phase ends at
+        pickup, which is what the request's consumer actually waited for)."""
+        rt = self._rt.pop(ticket, None)
+        if rt is not None:
+            rt.finish("expired" if res.deadline_missed else "resolved")
+
+    def trace_for(self, ticket: int) -> Optional[RequestTrace]:
+        """The in-flight :class:`~repro.serve.tracing.RequestTrace` for
+        ``ticket`` (None once picked up, or for untraced requests)."""
+        return self._rt.get(ticket)
 
     def harvest_partial(self, ticket: int) -> bool:
         """Force-finish a live request *now* for deadline expiry: a request
@@ -806,6 +916,10 @@ class LocalClusterEngine:
                 if entry[0] == ticket:
                     pool.queue.remove(entry)
                     _, req = entry
+                    rt = self._rt.get(ticket)
+                    if rt is not None:
+                        rt.event("expired", queued=True,
+                                 pool=pool_label(key))
                     res = ClusterResult(
                         request=req, conductance=float("inf"), size=0,
                         volume=0, support=0,

@@ -53,6 +53,7 @@ from repro.graphs.partition import PartitionedCSR
 from .cluster_engine import (ClusterRequest, ClusterResult,
                              LocalClusterEngine)
 from .telemetry import MetricsRegistry, pool_label
+from .tracing import RequestTrace, Tracer
 
 __all__ = ["AsyncClusterEngine", "ClusterFuture", "QueueFull"]
 
@@ -76,6 +77,7 @@ class ClusterFuture:
     def __init__(self, request: ClusterRequest) -> None:
         self.request = request
         self.ticket: Optional[int] = None     # engine ticket, set at admission
+        self.trace: Optional[RequestTrace] = None  # set when tracing is on
         self.submitted = time.monotonic()     # deadline/latency anchor
         self.latency_ms: Optional[float] = None
         self._cond = threading.Condition()
@@ -150,6 +152,11 @@ class AsyncClusterEngine:
     telemetry : a shared :class:`MetricsRegistry`, or None to create one.
     default_deadline_ms : applied to requests that carry no deadline of
         their own (None = best-effort, no deadline).
+    tracer : a :class:`~repro.serve.tracing.Tracer` to flight-record every
+        request's span tree (installed on the wrapped engine too); None
+        (default) inherits the engine's tracer, if any.  On deadline expiry
+        the victim's span tree is dumped into ``telemetry`` as a bounded
+        postmortem.  Tracing never changes answers (guarantee #8).
     """
 
     _DEFAULT_TICK_COST = 1e-3   # planner's cost guess before a pool's 1st EMA
@@ -158,6 +165,7 @@ class AsyncClusterEngine:
                  max_pools_per_tick: Optional[int] = None,
                  telemetry: Optional[MetricsRegistry] = None,
                  default_deadline_ms: Optional[float] = None,
+                 tracer: Optional[Tracer] = None,
                  **engine_kwargs):
         if isinstance(engine_or_graph, LocalClusterEngine):
             if engine_kwargs:
@@ -179,6 +187,9 @@ class AsyncClusterEngine:
         self.default_deadline_ms = default_deadline_ms
         self.telemetry = telemetry if telemetry is not None else \
             MetricsRegistry()
+        if tracer is not None:
+            self.engine.tracer = tracer     # one recorder for both layers
+        self.tracer = tracer if tracer is not None else self.engine.tracer
         self.last_plan: List[tuple] = []     # EDF order of the latest tick
         self._mutex = threading.Lock()       # admission queue + records
         self._engine_lock = threading.RLock()  # serializes engine access
@@ -215,9 +226,19 @@ class AsyncClusterEngine:
         # request raises here instead of stranding a future in the drive loop
         self.engine._pool_key(req, 0)
         fut = ClusterFuture(req)
+        if self.tracer is not None:
+            # trace opens on the caller's thread, *before* the future is
+            # visible to the drive loop, so the queued phase can never miss
+            # the admission that ends it
+            fut.trace = self.tracer.request(
+                seed=req.seed, method=req.method,
+                deadline_ms=req.deadline_ms, priority=req.priority)
+            fut.trace.phase("queued")
         with self._mutex:
             if self._inflight >= self.max_queue:
                 self.telemetry.inc("scheduler/rejected")
+                if fut.trace is not None:
+                    fut.trace.finish("rejected")
                 raise QueueFull(
                     f"{self._inflight} requests in flight (max_queue="
                     f"{self.max_queue}); back off and resubmit")
@@ -316,7 +337,7 @@ class AsyncClusterEngine:
         with self._mutex:
             batch, self._admissions = self._admissions, []
         for fut in batch:
-            ticket = self.engine.submit(fut.request)
+            ticket = self.engine.submit(fut.request, _trace=fut.trace)
             fut.ticket = ticket
             ddl = fut.request.deadline_ms
             # deadline and latency anchor at the submit() call, not at
@@ -379,6 +400,17 @@ class AsyncClusterEngine:
             self.telemetry.inc("scheduler/completed")
             if res.deadline_missed:
                 self.telemetry.inc("scheduler/deadline_missed")
+                if rec.future.trace is not None:
+                    # flight-record the victim: its full span tree goes into
+                    # the telemetry snapshot as a bounded postmortem
+                    rt = rec.future.trace
+                    self.telemetry.add_postmortem(dict(
+                        ticket=ticket, seed=res.request.seed,
+                        method=res.request.method,
+                        deadline_ms=res.request.deadline_ms,
+                        latency_ms=latency_ms,
+                        phases_ms=rt.summary()["phases_ms"],
+                        tree=self.tracer.request_tree(rt.rid)))
             # resolve before releasing the admission slot: once inflight()
             # reads 0 (drain()'s condition), every future is already done
             rec.future._resolve(res, latency_ms)

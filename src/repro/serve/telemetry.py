@@ -31,9 +31,16 @@ import bisect
 import json
 import random
 import threading
+import time
+from collections import deque
 from typing import Dict, List, Optional
 
-__all__ = ["Counter", "EMA", "Histogram", "MetricsRegistry", "pool_label"]
+__all__ = ["Counter", "EMA", "Histogram", "MetricsRegistry", "pool_label",
+           "SNAPSHOT_SCHEMA"]
+
+# Bumped whenever the snapshot shape changes; lets accumulated BENCH_*.json
+# artifacts be compared across PRs without guessing their vintage.
+SNAPSHOT_SCHEMA = "repro.serve.metrics/v1"
 
 
 def pool_label(key: tuple) -> str:
@@ -141,12 +148,15 @@ class Histogram:
 class MetricsRegistry:
     """Create-or-get registry of counters / gauges / EMAs / histograms."""
 
-    def __init__(self) -> None:
+    def __init__(self, max_postmortems: int = 16) -> None:
         self._lock = threading.Lock()
         self._counters: Dict[str, Counter] = {}
         self._gauges: Dict[str, float] = {}
         self._emas: Dict[str, EMA] = {}
         self._hists: Dict[str, Histogram] = {}
+        # Deadline-expiry victims' span trees (serve/tracing.py), newest
+        # kept: a bounded flight-recorder tail, not an unbounded log.
+        self._postmortems: deque = deque(maxlen=max_postmortems)
 
     # -- create-or-get -------------------------------------------------------
 
@@ -190,16 +200,33 @@ class MetricsRegistry:
         with self._lock:
             return self._gauges.get(name)
 
+    # -- postmortems ---------------------------------------------------------
+
+    def add_postmortem(self, record: Dict) -> None:
+        """Attach a deadline-miss postmortem (a JSON-able span tree from
+        ``Tracer.request_tree`` plus request context).  Bounded deque —
+        oldest victims roll off."""
+        with self._lock:
+            self._postmortems.append(record)
+
+    def postmortems(self) -> List[Dict]:
+        with self._lock:
+            return list(self._postmortems)
+
     # -- export --------------------------------------------------------------
 
     def snapshot(self) -> Dict:
-        """Plain-dict view (JSON-able) of every metric."""
+        """Plain-dict view (JSON-able) of every metric, under a versioned
+        header so accumulated artifacts are comparable across PRs."""
         with self._lock:
             return dict(
+                schema=SNAPSHOT_SCHEMA,
+                generated_unix=time.time(),
                 counters={k: c.value for k, c in self._counters.items()},
                 gauges=dict(self._gauges),
                 emas={k: e.value for k, e in self._emas.items()},
                 histograms={k: h.summary() for k, h in self._hists.items()},
+                postmortems=list(self._postmortems),
             )
 
     def to_json(self, indent: Optional[int] = 2) -> str:
