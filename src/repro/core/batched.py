@@ -65,6 +65,9 @@ __all__ = [
     "batched_sweep_cut", "batched_cluster_fixedcap",
     "batched_pr_nibble", "batched_hk_pr", "batched_cluster",
     "rounds_remaining_hint", "hk_rounds_remaining",
+    "LaneKernels", "dense_lane_kernels", "STATUS_ROWS",
+    "STATUS_FINISHED", "STATUS_OVERFLOW", "STATUS_FRONTIER",
+    "STATUS_ITER", "STATUS_PUSHES", "STATUS_EXCHANGED",
 ]
 
 
@@ -436,3 +439,123 @@ def batched_cluster(graph: CSRGraph, seeds, eps=1e-6, alpha=0.01,
 
     buckets = _bucketed_retry(B, dispatch, lad.advance, lad.exhausted, out, ovf)
     return BatchedClusterResult(overflow=ovf, buckets=buckets, **out)
+
+
+# ------------------------------------------- executable-shaped lane kernels
+# The serving engine (serve/cluster_engine.py) steps resident lane pools
+# through exactly the round functions above, but needs them packaged as
+# *executables*: fixed-signature jits it can AOT-lower (.lower().compile())
+# per pool shape, with the lane state donated so a tick updates the pool
+# buffers in place.  These factories are that packaging — one LaneKernels
+# bundle per (n, method, statics, caps, rounds, backend) shape, lru_cached
+# so every engine instance (and every pool re-creation after LRU eviction)
+# shares one set of jit objects process-wide.
+
+# Row indices of the stacked int32[STATUS_ROWS, B] per-tick status readback
+# (LaneKernels.status): ONE device→host transfer carries every observable
+# the engine's harvest/scheduler path needs — finished & overflow flags,
+# frontier occupancy, iteration counter, push count, and (dist lanes only)
+# exchanged-pair count.  Results never depend on these being fresh; harvest
+# correctness does, so the engine pulls them once per tick, post-step.
+(STATUS_FINISHED, STATUS_OVERFLOW, STATUS_FRONTIER,
+ STATUS_ITER, STATUS_PUSHES, STATUS_EXCHANGED) = range(6)
+STATUS_ROWS = 6
+
+
+class LaneKernels(NamedTuple):
+    """Fixed-signature tick kernels for one lane-pool shape.
+
+    ``init(seeds[B]) → state`` (vmapped placeholder build);
+    ``inject(state, lane, seed) → state`` (donates ``state``);
+    ``step(graph, state, eps[B], alpha[B], active[B]) → state`` (donates
+    ``state``; ``alpha`` is ignored by HK-PR but kept in the signature so
+    every pool shares one calling convention);
+    ``status(state) → int32[STATUS_ROWS, B]`` (the coalesced readback);
+    ``sweep(graph, state, lane) → (order, meta_i32[4], φ)`` — the
+    harvest-gather: slice one finished lane's diffusion out of the pool and
+    sweep it on-device, returning only ``order`` (int32[cap_n] / [cap_v]),
+    ``meta = [best_size, best_volume, nnz, overflow]`` and the best
+    conductance — never the full pool state.
+    """
+    init: object
+    inject: object
+    step: object
+    status: object
+    sweep: object
+
+
+@functools.lru_cache(maxsize=None)
+def dense_lane_kernels(n: int, method: str, statics: tuple, cap_f: int,
+                       cap_e: int, cap_n: int, sweep_cap_e: int,
+                       rounds: int, backend: str) -> LaneKernels:
+    """Dense-lane kernel bundle: PR-Nibble (``statics = (optimized, β)``)
+    or HK-PR (``statics = (N, t)``) over f32[n] state rows.  The step body
+    is the same masked while-loop the batched drivers run, so a lane's
+    trajectory is bit-identical to the single-seed driver's (guarantee #2);
+    donation and AOT lowering change where buffers live, never values
+    (guarantee #9)."""
+    from .pr_nibble import pr_nibble_init, pr_nibble_round, pr_nibble_alive
+    from .hk_pr import hk_pr_init, hk_pr_round, hk_pr_alive
+    if method == "pr_nibble":
+        optimized, beta = statics
+        seed_init = lambda s: pr_nibble_init(s, n, cap_f)
+        alive = lambda s: pr_nibble_alive(s, MAX_ITERS)
+        rnd = lambda g, s, e, a: pr_nibble_round(g, s, e, a, optimized,
+                                                 cap_e, beta, backend)
+        iter_of = lambda s: s.t
+        done_of = lambda s: jnp.zeros_like(s.overflow)
+    elif method == "hk_pr":
+        N, t = statics
+        seed_init = lambda s: hk_pr_init(s, n, cap_f)
+        alive = hk_pr_alive
+        rnd = lambda g, s, e, a: hk_pr_round(g, s, N, e, t, cap_e, backend)
+        iter_of = lambda s: s.j
+        done_of = lambda s: s.done
+    else:
+        raise ValueError(f"unknown method: {method!r}")
+
+    @jax.jit
+    def init(seeds):
+        return jax.vmap(seed_init)(seeds)
+
+    @functools.partial(jax.jit, donate_argnums=(0,))
+    def inject(state, lane, seed):
+        return jax.tree.map(lambda buf, v: buf.at[lane].set(v),
+                            state, seed_init(seed))
+
+    @functools.partial(jax.jit, donate_argnums=(1,))
+    def step(graph, state, eps, alpha, active):
+        def one(s, e, a, act):
+            def cond(c):
+                s2, k = c
+                return act & (k < rounds) & alive(s2)
+
+            def body(c):
+                s2, k = c
+                return rnd(graph, s2, e, a), k + 1
+
+            s2, _ = jax.lax.while_loop(cond, body,
+                                       (s, jnp.asarray(0, jnp.int32)))
+            return s2
+        return jax.vmap(one)(state, eps, alpha, active)
+
+    @jax.jit
+    def status(state):
+        fc = state.frontier.count.astype(jnp.int32)
+        fin = ((fc == 0) | state.overflow | done_of(state)
+               | (iter_of(state) >= MAX_ITERS))
+        return jnp.stack([fin.astype(jnp.int32),
+                          state.overflow.astype(jnp.int32), fc,
+                          iter_of(state).astype(jnp.int32),
+                          state.pushes.astype(jnp.int32),
+                          jnp.zeros_like(fc)])
+
+    @jax.jit
+    def sweep(graph, state, lane):
+        sw = sweep_cut_dense(graph, state.p[lane], cap_n, sweep_cap_e,
+                             backend)
+        meta = jnp.stack([sw.best_size, sw.best_volume, sw.nnz,
+                          sw.overflow.astype(jnp.int32)])
+        return sw.order, meta, sw.best_conductance
+
+    return LaneKernels(init, inject, step, status, sweep)

@@ -56,6 +56,7 @@ import jax.numpy as jnp
 from repro.graphs.csr import CSRGraph
 from . import ops as _ops
 from .batched import (_bucketed_retry, _prep_batch, _CapLadder,
+                      LaneKernels as _LaneKernels,
                       rounds_remaining_hint as _dense_rounds_remaining_hint)
 from .pr_nibble_sparse import pr_nibble_sparse_fixedcap
 from .sweep import sweep_cut_sparse
@@ -66,7 +67,7 @@ __all__ = [
     "batched_cluster_sparse_fixedcap",
     "batched_pr_nibble_sparse", "batched_cluster_sparse",
     "sparse_rows_to_dense", "sparse_lane_footprint", "pick_backend",
-    "sparse_rounds_remaining_hint",
+    "sparse_rounds_remaining_hint", "sparse_lane_kernels",
 ]
 
 
@@ -358,3 +359,71 @@ def pick_backend(n: int, cap_v: int, ratio: int = 4, *,
     if num_shards > 1 and chip_budget is not None and 8 * n > chip_budget:
         return "dist"
     return "sparse" if n >= 2 * ratio * cap_v else "dense"
+
+
+# ------------------------------------------- executable-shaped lane kernels
+
+@functools.lru_cache(maxsize=None)
+def sparse_lane_kernels(n: int, statics: tuple, cap_f: int, cap_v: int,
+                        cap_e: int, sweep_cap_e: int, rounds: int,
+                        backend: str) -> _LaneKernels:
+    """Sparse-lane kernel bundle for the serving engine — the SparseVec
+    analogue of :func:`repro.core.batched.dense_lane_kernels` (same
+    ``LaneKernels`` signature set, same donation/AOT contract).  The sweep
+    kernel gathers only the finished lane's ``(ids, vals, count)`` support
+    — O(cap_v), never O(n) — before running the sparse Theorem-1 sweep, so
+    harvests copy support, not pool state.  ``statics = (optimized, β)``
+    with β fixed at 1.0 (sparse lanes serve plain PR-Nibble only)."""
+    from .pr_nibble_sparse import (pr_nibble_sparse_init,
+                                   pr_nibble_sparse_round,
+                                   pr_nibble_sparse_alive)
+    optimized, _beta = statics
+    seed_init = lambda s: pr_nibble_sparse_init(s, n, cap_f, cap_v)
+
+    @jax.jit
+    def init(seeds):
+        return jax.vmap(seed_init)(seeds)
+
+    @functools.partial(jax.jit, donate_argnums=(0,))
+    def inject(state, lane, seed):
+        return jax.tree.map(lambda buf, v: buf.at[lane].set(v),
+                            state, seed_init(seed))
+
+    @functools.partial(jax.jit, donate_argnums=(1,))
+    def step(graph, state, eps, alpha, active):
+        def one(s, e, a, act):
+            def cond(c):
+                s2, k = c
+                return act & (k < rounds) & pr_nibble_sparse_alive(s2, 10_000)
+
+            def body(c):
+                s2, k = c
+                return (pr_nibble_sparse_round(graph, s2, e, a, optimized,
+                                               cap_e, backend),
+                        k + 1)
+
+            s2, _ = jax.lax.while_loop(cond, body,
+                                       (s, jnp.asarray(0, jnp.int32)))
+            return s2
+        return jax.vmap(one)(state, eps, alpha, active)
+
+    @jax.jit
+    def status(state):
+        fc = state.frontier.count.astype(jnp.int32)
+        fin = (fc == 0) | state.overflow | (state.t >= 10_000)
+        return jnp.stack([fin.astype(jnp.int32),
+                          state.overflow.astype(jnp.int32), fc,
+                          state.t.astype(jnp.int32),
+                          state.pushes.astype(jnp.int32),
+                          jnp.zeros_like(fc)])
+
+    @jax.jit
+    def sweep(graph, state, lane):
+        sw = sweep_cut_sparse(graph, state.p.ids[lane], state.p.vals[lane],
+                              state.p.count[lane], sweep_cap_e,
+                              backend=backend)
+        meta = jnp.stack([sw.best_size, sw.best_volume, sw.nnz,
+                          sw.overflow.astype(jnp.int32)])
+        return sw.order, meta, sw.best_conductance
+
+    return _LaneKernels(init, inject, step, status, sweep)

@@ -64,6 +64,13 @@ class GraphHandle:
         self._pg = pg
         self.mesh = mesh
         self.axis = axis
+        # Monotonic content version: the serving layer's seed→result cache
+        # (repro.serve.result_cache) keys on it, so bumping it on any edge
+        # mutation invalidates every cached community at once.  The handle
+        # owns it because the handle is the graph-identity contract — both
+        # representations (csr, pg) describe one logical graph at one
+        # version.
+        self.version = 0
 
     # -- constructors --------------------------------------------------------
 
@@ -132,6 +139,13 @@ class GraphHandle:
         if self._csr is not None:
             return np.asarray(self._csr.deg)
         return np.asarray(self._pg.deg).reshape(-1)[: self.n]
+
+    def bump_version(self) -> int:
+        """Advance the content version (call after mutating the graph the
+        handle wraps).  Serving-layer result caches key on the version, so
+        stale communities can never be served after a bump."""
+        self.version += 1
+        return self.version
 
     def require_mesh(self):
         if self.mesh is None:

@@ -4,9 +4,11 @@ from .cluster_engine import (ClusterRequest, ClusterResult,
 from .scheduler import AsyncClusterEngine, ClusterFuture, QueueFull
 from .telemetry import MetricsRegistry, pool_label
 from .tracing import RequestTrace, Span, Tracer, annotate
+from .result_cache import ResultCache, result_key
 
 __all__ = ["ServeConfig", "generate", "batched_serve",
            "ClusterRequest", "ClusterResult", "LocalClusterEngine",
            "UnknownTicket", "AsyncClusterEngine", "ClusterFuture",
            "QueueFull", "MetricsRegistry", "pool_label",
-           "RequestTrace", "Span", "Tracer", "annotate"]
+           "RequestTrace", "Span", "Tracer", "annotate",
+           "ResultCache", "result_key"]

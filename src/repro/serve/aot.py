@@ -1,0 +1,125 @@
+"""Ahead-of-time compiled tick executables for the serving engine.
+
+The steady-state serving tick must never trace: first-touch jit tracing is
+tens-to-hundreds of milliseconds — longer than a typical deadline — and the
+jit call path re-checks its cache on every dispatch.  This module lowers
+each lane pool's tick kernels (:class:`repro.core.batched.LaneKernels`) to
+XLA executables *once*, at pool creation (or eagerly, via
+``LocalClusterEngine.warmup``), and caches them per pool key:
+
+  * ``jax.jit(...).lower(...).compile()`` against the pool's exact avals —
+    the compiled objects dispatch without re-entering the jit cache and keep
+    their ``donate_argnums`` (lane state updates in place);
+  * the cache key is the engine's pool key ``(method, backend, statics,
+    ops_backend, bucket, topo)``, so a bucket-ladder promotion hops between
+    already-compiled executables and an LRU-evicted pool's re-creation is a
+    cache hit, never a re-trace;
+  * ``compiles`` / ``hits`` / ``compile_seconds`` counters feed the engine's
+    ``stats`` dict (and the re-trace-freedom guard in
+    tests/test_serve_perf.py).
+
+AOT compilation changes *when* programs are built, never what they compute:
+the lowered jaxprs are the same ones the jit path would trace, so results
+stay bit-identical (docs/algorithms.md, guarantee #9).
+"""
+from __future__ import annotations
+
+import threading
+import time
+from typing import Callable, Dict, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.batched import LaneKernels
+
+__all__ = ["PoolExecutables", "ExecutableCache", "compile_lane_executables"]
+
+
+class PoolExecutables(NamedTuple):
+    """AOT-compiled tick entry points for one pool shape.  Same signatures
+    as :class:`~repro.core.batched.LaneKernels` (init / inject / step /
+    status / sweep), but each is a ``jax`` ``Compiled`` object: calling it
+    never traces, and the donated state argument of ``inject``/``step`` is
+    consumed (the caller must drop its reference, which the engine does by
+    reassigning ``pool.state``)."""
+    init: Callable
+    inject: Callable
+    step: Callable
+    status: Callable
+    sweep: Callable
+
+
+def compile_lane_executables(kern: LaneKernels, graph,
+                             batch_slots: int) -> PoolExecutables:
+    """Lower + compile every kernel of ``kern`` against the pool's avals.
+
+    ``graph`` is the concrete :class:`~repro.graphs.csr.CSRGraph` the pool
+    serves (its arrays contribute avals only — the executables still take
+    the graph as a runtime argument, so they are shared by construction
+    with the jit path's trace).  The lane-state aval comes from
+    ``eval_shape`` of the init kernel, so dense/sparse/HK pools all lower
+    through this one function.
+    """
+    B = batch_slots
+    seeds = jax.ShapeDtypeStruct((B,), jnp.int32)
+    state = jax.eval_shape(kern.init, seeds)
+    f32B = jax.ShapeDtypeStruct((B,), jnp.float32)
+    boolB = jax.ShapeDtypeStruct((B,), jnp.bool_)
+    i32 = jax.ShapeDtypeStruct((), jnp.int32)
+    return PoolExecutables(
+        init=kern.init.lower(seeds).compile(),
+        inject=kern.inject.lower(state, i32, i32).compile(),
+        step=kern.step.lower(graph, state, f32B, f32B, boolB).compile(),
+        status=kern.status.lower(state).compile(),
+        sweep=kern.sweep.lower(graph, state, i32).compile(),
+    )
+
+
+class ExecutableCache:
+    """Pool-key → :class:`PoolExecutables` cache with compile accounting.
+
+    One instance per engine (the executables close over that engine's graph
+    avals and batch width).  ``get`` is locked — the async scheduler's
+    drive thread and a caller running ``warmup`` may race pool creation —
+    and builds at most once per key.  Evicting a *pool* (device state)
+    never evicts its *executables*: compiled programs are small, bounded by
+    the O(log) distinct bucket shapes a request stream can produce, and
+    keeping them is exactly what makes pool re-creation re-trace-free.
+    """
+
+    def __init__(self) -> None:
+        self._lock = threading.Lock()
+        self._entries: Dict[tuple, PoolExecutables] = {}
+        self.compiles = 0          # cache misses: full lower+compile builds
+        self.hits = 0              # cache hits: reused executable bundles
+        self.compile_seconds = 0.0
+
+    def __len__(self) -> int:
+        with self._lock:
+            return len(self._entries)
+
+    def get(self, key: tuple,
+            build: Callable[[], PoolExecutables]) -> PoolExecutables:
+        """The executables for ``key``, building (and timing) on first use."""
+        with self._lock:
+            ex = self._entries.get(key)
+            if ex is not None:
+                self.hits += 1
+                return ex
+            t0 = time.perf_counter()
+            ex = build()
+            self.compile_seconds += time.perf_counter() - t0
+            self.compiles += 1
+            self._entries[key] = ex
+            return ex
+
+    def peek(self, key: tuple) -> Optional[PoolExecutables]:
+        with self._lock:
+            return self._entries.get(key)
+
+    def stats(self) -> Dict:
+        with self._lock:
+            return dict(entries=len(self._entries), compiles=self.compiles,
+                        hits=self.hits,
+                        compile_seconds=self.compile_seconds)

@@ -16,8 +16,28 @@ Lanes that overflow their bucket's workspace are re-enqueued one
 power-of-two bucket up (the bucketed recompilation contract of
 core/frontier.py), so a request stream compiles at most O(log) distinct
 shapes per (method, backend).  Idle pools beyond ``lru_pools`` are evicted
-least-recently-used to bound device memory; XLA's jit cache keeps the
-compiled kernels, so re-creating an evicted pool is cheap.
+least-recently-used to bound device memory; the engine's
+:class:`~repro.serve.aot.ExecutableCache` keeps the AOT-compiled tick
+programs, so re-creating an evicted pool never re-traces.
+
+Hot path
+--------
+Local (dense/sparse) pools run entirely through ahead-of-time-compiled
+executables (serve/aot.py): every tick entry point — init, inject, step,
+status, harvest-gather sweep — is ``jit(...).lower(...).compile()``'d once
+per pool key (eagerly via :meth:`LocalClusterEngine.warmup`, else at first
+pool creation), with the lane state **donated** on inject/step so pool
+buffers update in place.  A tick pays exactly **one** device→host sync: the
+stacked int32[6, B] status readback (finished / overflow / frontier / iters
+/ pushes / exchanged), mirrored host-side and consumed by harvest, the
+finalize counters, the scheduler's pending-rounds hints, and trace
+annotations alike.  Harvest copies a finished lane's *support* (order
+buffer + 4 counters + φ), never pool state.  In front of it all sits a
+versioned seed→result LRU (serve/result_cache.py): a repeated query resolves
+at submit in O(1), keyed on the handle's graph version so edge mutations
+invalidate wholesale.  None of this changes answers — AOT lowering,
+donation, coalesced readbacks, and caching move bytes and compile time,
+never values (docs/algorithms.md, guarantee #9).
 
 Backends
 --------
@@ -74,7 +94,6 @@ occupancy) move through traced values.
 from __future__ import annotations
 
 import dataclasses
-import functools
 import math
 import time
 from collections import OrderedDict, deque
@@ -88,15 +107,15 @@ from repro.graphs.csr import CSRGraph
 from repro.graphs.handle import GraphHandle, as_handle
 from repro.core import ops as core_ops
 from repro.core.batched_dist import dist_lane_kernels
-from repro.core.pr_nibble import (MAX_ITERS, pr_nibble_init,
-                                  pr_nibble_round, pr_nibble_alive)
-from repro.core.pr_nibble_sparse import (pr_nibble_sparse_init,
-                                         pr_nibble_sparse_round,
-                                         pr_nibble_sparse_alive)
-from repro.core.hk_pr import hk_pr_init, hk_pr_round, hk_pr_alive
+from repro.core.pr_nibble import MAX_ITERS
 from repro.core.sweep import sweep_cut_dense, sweep_cut_sparse
-from repro.core.batched import rounds_remaining_hint, hk_rounds_remaining
-from repro.core.batched_sparse import pick_backend
+from repro.core.batched import (STATUS_EXCHANGED, STATUS_FINISHED,
+                                STATUS_FRONTIER, STATUS_ITER, STATUS_OVERFLOW,
+                                STATUS_PUSHES, dense_lane_kernels,
+                                hk_rounds_remaining, rounds_remaining_hint)
+from repro.core.batched_sparse import pick_backend, sparse_lane_kernels
+from repro.serve.aot import ExecutableCache, compile_lane_executables
+from repro.serve.result_cache import ResultCache, result_key
 from repro.serve.telemetry import EMA, pool_label
 from repro.serve.tracing import RequestTrace, Tracer
 
@@ -151,91 +170,24 @@ class ClusterResult:
     #   the converged diffusion
 
 
-# --------------------------------------------------------------- step kernels
-# Module-level jits: every pool with the same (slots, caps, statics) shape
-# hits the same compile-cache entry, engine instances included.
+# --------------------------------------------------------------- tick kernels
+# Local (dense/sparse) pools step through AOT-compiled executables: the
+# LaneKernels factories of core/batched.py / core/batched_sparse.py are
+# lowered+compiled per pool key by the engine's ExecutableCache
+# (serve/aot.py), with the lane state donated — see LocalClusterEngine.
+# Dist pools keep their shard_map'd jits (repro.core.batched_dist, lru_cached
+# per topology); only their coalesced status readback lives here.
 
-@functools.partial(jax.jit, static_argnums=(5, 6, 7, 8, 9))
-def _prn_step(graph, state, eps, alpha, active, rounds: int,
-              optimized: bool, cap_e: int, beta: float, backend: str):
-    """Advance each active lane up to ``rounds`` PR-Nibble push rounds."""
-    def one(s, e, a, act):
-        def cond(c):
-            s2, k = c
-            return act & (k < rounds) & pr_nibble_alive(s2, MAX_ITERS)
-
-        def body(c):
-            s2, k = c
-            return (pr_nibble_round(graph, s2, e, a, optimized, cap_e, beta,
-                                    backend),
-                    k + 1)
-
-        s2, _ = jax.lax.while_loop(cond, body, (s, jnp.asarray(0, jnp.int32)))
-        return s2
-    return jax.vmap(one)(state, eps, alpha, active)
-
-
-@functools.partial(jax.jit, static_argnums=(5, 6, 7, 8))
-def _prns_step(graph, state, eps, alpha, active, rounds: int,
-               optimized: bool, cap_e: int, backend: str):
-    """Advance each active lane up to ``rounds`` *sparse* PR-Nibble rounds.
-
-    ``state`` is a vmapped :class:`PRNibbleSparseState` (SparseVec leaves
-    with a leading lane axis); same stepping structure as :func:`_prn_step`,
-    so a sparse lane's trajectory is identical to the single-seed sparse
-    driver's.
-    """
-    def one(s, e, a, act):
-        def cond(c):
-            s2, k = c
-            return act & (k < rounds) & pr_nibble_sparse_alive(s2, MAX_ITERS)
-
-        def body(c):
-            s2, k = c
-            return (pr_nibble_sparse_round(graph, s2, e, a, optimized, cap_e,
-                                           backend),
-                    k + 1)
-
-        s2, _ = jax.lax.while_loop(cond, body, (s, jnp.asarray(0, jnp.int32)))
-        return s2
-    return jax.vmap(one)(state, eps, alpha, active)
-
-
-@functools.partial(jax.jit, static_argnums=(4, 5, 6, 7, 8))
-def _hk_step(graph, state, eps, active, rounds: int, N: int, t: float,
-             cap_e: int, backend: str):
-    """Advance each active lane up to ``rounds`` HK-PR Taylor levels."""
-    def one(s, e, act):
-        def cond(c):
-            s2, k = c
-            return act & (k < rounds) & hk_pr_alive(s2)
-
-        def body(c):
-            s2, k = c
-            return hk_pr_round(graph, s2, N, e, t, cap_e, backend), k + 1
-
-        s2, _ = jax.lax.while_loop(cond, body, (s, jnp.asarray(0, jnp.int32)))
-        return s2
-    return jax.vmap(one)(state, eps, active)
-
-
-@functools.partial(jax.jit, static_argnums=(3, 4))
-def _prn_inject(state, lane, seed, n: int, cap_f: int):
-    """Reset one lane to a fresh seed — dynamic lane/seed, so no recompile."""
-    return jax.tree.map(lambda buf, v: buf.at[lane].set(v),
-                        state, pr_nibble_init(seed, n, cap_f))
-
-
-@functools.partial(jax.jit, static_argnums=(3, 4))
-def _hk_inject(state, lane, seed, n: int, cap_f: int):
-    return jax.tree.map(lambda buf, v: buf.at[lane].set(v),
-                        state, hk_pr_init(seed, n, cap_f))
-
-
-@functools.partial(jax.jit, static_argnums=(3, 4, 5))
-def _prns_inject(state, lane, seed, n: int, cap_f: int, cap_v: int):
-    return jax.tree.map(lambda buf, v: buf.at[lane].set(v),
-                        state, pr_nibble_sparse_init(seed, n, cap_f, cap_v))
+@jax.jit
+def _dist_status(front, t, pushes, overflow, exchanged):
+    """Stacked int32[6, B] status readback for dist lanes — the replicated
+    per-lane scalars of DistLaneState, in the STATUS_* row order of
+    repro.core.batched, so one transfer serves harvest, the scheduler's
+    pending-rounds hints, and the trace annotations."""
+    i32 = lambda x: x.astype(jnp.int32)
+    fin = (front == 0) | overflow | (t >= MAX_ITERS)
+    return jnp.stack([i32(fin), i32(overflow), i32(front), i32(t),
+                      i32(pushes), i32(exchanged)])
 
 
 # ----------------------------------------------------------------- lane pool
@@ -246,56 +198,55 @@ class _Pool:
     the (mesh axis, shard count) pair for ``dist`` pools — shard topology is
     pool-key material because it selects a different compiled SPMD program."""
 
-    def __init__(self, engine: "LocalClusterEngine", method: str,
-                 backend: str, statics: tuple, bucket: int,
-                 ops_backend: str = "xla",
-                 topo: Optional[Tuple[str, int]] = None):
+    def __init__(self, engine: "LocalClusterEngine", key: tuple):
+        method, backend, statics, ops_backend, bucket, topo = key
         self.engine = engine
+        self.key = key
         self.method = method
         self.backend = backend
         self.ops_backend = ops_backend
         self.statics = statics
         self.bucket = bucket
         self.topo = topo
-        n = engine.graph.n
-        self.cap_f = min(engine.cap_f << bucket, n + 1)
-        self.cap_e = engine.cap_e << bucket
-        self.cap_n = min(engine.cap_n << bucket, n)
-        self.sweep_cap_e = engine.sweep_cap_e << bucket
-        self.cap_v = min(engine.cap_v << bucket, n + 1)
+        caps = engine._pool_caps(key)
+        self.cap_f = caps["cap_f"]
+        self.cap_e = caps["cap_e"]
+        self.cap_n = caps["cap_n"]
+        self.sweep_cap_e = caps["sweep_cap_e"]
+        self.cap_v = caps["cap_v"]
         B = engine.batch_slots
         # lanes start inactive; injected states overwrite these placeholders
         if backend == "dist":
             pg = engine.handle.partitioned()
             mesh = engine.handle.require_mesh()
-            # dist cap_f is *per shard*: a local frontier can never exceed
-            # the shard's row count
-            self.cap_f = min(engine.cap_f << bucket, pg.rows_per + 1)
-            self.cap_x = min(engine.cap_x << bucket, self.cap_e)
+            self.cap_x = caps["cap_x"]
             optimized, _beta = statics
             self._dist_init, self._dist_inject, self._dist_step_for = \
                 dist_lane_kernels(mesh, engine.handle.axis, pg.rows_per,
                                   self.cap_f, self.cap_e, self.cap_x,
                                   optimized, ops_backend)
+            self.exec = None    # dist pools step through the shard_map jits
             self.state = self._dist_init(jnp.zeros((B,), jnp.int32))
         else:
-            if backend == "sparse":
-                init = lambda s: pr_nibble_sparse_init(s, n, self.cap_f,
-                                                       self.cap_v)
-            elif method == "pr_nibble":
-                init = lambda s: pr_nibble_init(s, n, self.cap_f)
-            else:
-                init = lambda s: hk_pr_init(s, n, self.cap_f)
-            self.state = jax.vmap(init)(jnp.zeros((B,), jnp.int32))
+            # AOT executables from the engine's cache: a re-created pool
+            # (after LRU eviction) or a ladder hop re-uses the compiled
+            # programs — pool construction never re-traces after warmup
+            self.exec = engine._executables_for(key)
+            self.state = self.exec.init(jnp.zeros((B,), jnp.int32))
         self.eps = np.zeros(B, np.float32)
         self.alpha = np.zeros(B, np.float32)
         self.lane: List[Optional[Tuple[int, ClusterRequest]]] = [None] * B
         self.queue: deque = deque()
+        # Host mirror of the tick's coalesced status readback
+        # (int32[STATUS_ROWS, B]): written once per tick by harvest's single
+        # device→host sync, patched host-side on inject, consumed by
+        # finalize (pushes/iterations/overflow) and the scheduler hints
+        # (pending_rounds) — nothing else re-syncs.
+        self._status_host: Optional[np.ndarray] = None
         # Cost-model observables (serve/scheduler.py): EMA of measured tick
         # wall time, fed by LocalClusterEngine.tick_pool.  None until the
-        # first tick (which typically includes this shape's compile).
-        # Same telemetry.EMA the registry exports, so alpha is configured in
-        # exactly one place (engine.cost_ema_alpha).
+        # first tick.  Same telemetry.EMA the registry exports, so alpha is
+        # configured in exactly one place (engine.cost_ema_alpha).
         self._cost = EMA(engine.cost_ema_alpha)
         self.ticks = 0
         engine.stats["pools_created"] += 1
@@ -329,26 +280,26 @@ class _Pool:
 
     def pending_rounds(self) -> np.ndarray:
         """Estimated push rounds remaining per active lane (0 for idle
-        lanes).  PR-Nibble lanes (dense or sparse — same round structure)
-        use the survival hint :func:`repro.core.batched.rounds_remaining_hint`;
-        HK-PR lanes know their remaining Taylor levels exactly
-        (:func:`repro.core.batched.hk_rounds_remaining`).  Costs one small
-        device→host sync per call."""
+        lanes).  PR-Nibble lanes (dense, sparse, or dist — same round
+        structure) use the survival hint
+        :func:`repro.core.batched.rounds_remaining_hint`; HK-PR lanes know
+        their remaining Taylor levels exactly
+        (:func:`repro.core.batched.hk_rounds_remaining`).  Free of device
+        syncs: consumes the host mirror of the tick's coalesced status
+        readback.  For a pool that has never pulled status, every occupied
+        lane is freshly injected (t = 0, singleton frontier), for which the
+        survival hint is exactly 1 round — synthesized host-side."""
         mask = np.array([l is not None for l in self.lane])
-        st = self.state
-        if self.backend == "dist":
-            # dist lanes carry no Frontier object; the replicated global
-            # frontier count plays the same role in the survival hint
-            hints = rounds_remaining_hint(np.asarray(st.t),
-                                          np.asarray(st.front))
-            return np.where(mask, hints, 0)
-        fc = np.asarray(st.frontier.count)
+        sh = self._status_host
+        if sh is None:
+            return np.where(mask, 1, 0)
+        iters, fc = sh[STATUS_ITER], sh[STATUS_FRONTIER]
         if self.method == "pr_nibble":
-            hints = rounds_remaining_hint(np.asarray(st.t), fc)
+            hints = rounds_remaining_hint(iters, fc)
         else:
             N, _ = self.statics
-            hints = hk_rounds_remaining(np.asarray(st.j), np.asarray(st.done),
-                                        fc, N)
+            hints = hk_rounds_remaining(
+                iters, sh[STATUS_FINISHED].astype(bool), fc, N)
         return np.where(mask, hints, 0)
 
     def pending_ticks(self) -> int:
@@ -365,7 +316,6 @@ class _Pool:
         return max(lane_part + waves * max(lane_part, 1), 1)
 
     def refill(self) -> None:
-        n = self.engine.graph.n
         for i in range(len(self.lane)):
             if self.lane[i] is not None or not self.queue:
                 continue
@@ -377,13 +327,16 @@ class _Pool:
             seed = jnp.asarray(req.seed, jnp.int32)
             if self.backend == "dist":
                 self.state = self._dist_inject(self.state, lane, seed)
-            elif self.backend == "sparse":
-                self.state = _prns_inject(self.state, lane, seed, n,
-                                          self.cap_f, self.cap_v)
-            elif self.method == "pr_nibble":
-                self.state = _prn_inject(self.state, lane, seed, n, self.cap_f)
             else:
-                self.state = _hk_inject(self.state, lane, seed, n, self.cap_f)
+                # donated: the old state buffers are consumed in place
+                self.state = self.exec.inject(self.state, lane, seed)
+            if self._status_host is not None:
+                # keep the host status mirror truthful for lanes injected
+                # after the last pull: a fresh lane is exactly (unfinished,
+                # no overflow, singleton frontier, 0 iters, 0 pushes) — so
+                # a force-finalize or scheduler hint between now and the
+                # next harvest reads correct values without a sync
+                self._status_host[:, i] = (0, 0, 1, 0, 0, 0)
             self.engine.stats["injections"] += 1
             rt = self.engine._rt.get(idx)
             if rt is not None:
@@ -394,66 +347,65 @@ class _Pool:
         active = np.array([l is not None for l in self.lane])
         if not active.any():
             return
-        rounds = self.engine.rounds_per_step
         if self.backend == "dist":
             pg = self.engine.handle.partitioned()
-            self.state = self._dist_step_for(rounds)(
+            self.state = self._dist_step_for(self.engine.rounds_per_step)(
                 pg.indptr, pg.indices, pg.deg, self.state,
                 jnp.asarray(self.eps), jnp.asarray(self.alpha),
                 jnp.asarray(active))
-            self.engine.stats["steps"] += 1
-            return
-        g = self.engine.graph
-        if self.backend == "sparse":
-            optimized, _beta = self.statics
-            self.state = _prns_step(g, self.state, jnp.asarray(self.eps),
-                                    jnp.asarray(self.alpha),
-                                    jnp.asarray(active), rounds,
-                                    optimized, self.cap_e, self.ops_backend)
-        elif self.method == "pr_nibble":
-            optimized, beta = self.statics
-            self.state = _prn_step(g, self.state, jnp.asarray(self.eps),
-                                   jnp.asarray(self.alpha),
-                                   jnp.asarray(active), rounds,
-                                   optimized, self.cap_e, beta,
-                                   self.ops_backend)
         else:
-            N, t = self.statics
-            self.state = _hk_step(g, self.state, jnp.asarray(self.eps),
-                                  jnp.asarray(active), rounds, N, t,
-                                  self.cap_e, self.ops_backend)
+            # AOT executable, state donated: no jit-cache lookup, no trace,
+            # and the pool buffers update in place
+            self.state = self.exec.step(
+                self.engine.graph, self.state, jnp.asarray(self.eps),
+                jnp.asarray(self.alpha), jnp.asarray(active))
         self.engine.stats["steps"] += 1
 
-    def harvest(self) -> None:
+    def _pull_status(self) -> np.ndarray:
+        """The tick's ONE device→host sync: the stacked int32[6, B] status
+        readback (finished/overflow/frontier/iters/pushes/exchanged), cached
+        on the pool for everything downstream — harvest decisions, finalize
+        counters, scheduler hints, trace annotations."""
         st = self.state
-        ovf = np.asarray(st.overflow)
         if self.backend == "dist":
-            count = np.asarray(st.front)
-            finished = (count == 0) | ovf | (np.asarray(st.t) >= MAX_ITERS)
-        elif self.method == "pr_nibble":
-            count = np.asarray(st.frontier.count)
-            finished = (count == 0) | ovf | (np.asarray(st.t) >= MAX_ITERS)
+            dev = _dist_status(st.front, st.t, st.pushes, st.overflow,
+                               st.exchanged)
         else:
-            count = np.asarray(st.frontier.count)
-            finished = (count == 0) | ovf | np.asarray(st.done)
-        # Per-lane request annotations (traced runs only — the pushes pull
-        # is an extra device→host sync we don't pay untraced): the batched
-        # state already carries the paper-native work measures.
+            dev = self.exec.status(st)
+        # np.array (not asarray): the mirror must be writable — refill
+        # patches freshly injected lanes' rows host-side between pulls
+        self._status_host = np.array(dev)
+        self.engine.stats["status_syncs"] += 1
+        return self._status_host
+
+    def _ensure_status(self) -> np.ndarray:
+        """The host status mirror, pulling it only if this pool has never
+        synced (possible for force-finalize before any tick)."""
+        if self._status_host is None:
+            return self._pull_status()
+        return self._status_host
+
+    def harvest(self) -> None:
+        if not any(l is not None for l in self.lane):
+            return
+        sh = self._pull_status()
+        finished = sh[STATUS_FINISHED].astype(bool)
+        ovf = sh[STATUS_OVERFLOW].astype(bool)
+        count = sh[STATUS_FRONTIER]
+        # Per-lane request annotations (traced runs only): every observable
+        # rides the coalesced readback — tracing costs no extra sync.
         if self.engine.tracer is not None:
-            pushes = np.asarray(st.pushes)
-            exch = (np.asarray(st.exchanged)
-                    if self.backend == "dist" else None)
             for i, slot in enumerate(self.lane):
                 if slot is None:
                     continue
                 rt = self.engine._rt.get(slot[0])
                 if rt is not None:
                     obs = dict(frontier=int(count[i]),
-                               pushes=int(pushes[i]),
+                               pushes=int(sh[STATUS_PUSHES][i]),
                                overflow=bool(ovf[i]),
                                finished=bool(finished[i]))
-                    if exch is not None:
-                        obs["exchanged"] = int(exch[i])
+                    if self.backend == "dist":
+                        obs["exchanged"] = int(sh[STATUS_EXCHANGED][i])
                     rt.event("lane_obs", **obs)
         for i, slot in enumerate(self.lane):
             if slot is None or not finished[i]:
@@ -479,7 +431,7 @@ class _Pool:
         best-effort partial result instead of letting it finish late."""
         idx, req = self.lane[i]
         self.lane[i] = None
-        ovf = bool(np.asarray(self.state.overflow)[i])
+        ovf = bool(self._ensure_status()[STATUS_OVERFLOW][i])
         rt = self.engine._rt.get(idx)
         if rt is not None:
             rt.event("expired", lane=i, bucket=self.bucket)
@@ -488,53 +440,78 @@ class _Pool:
 
     def _finalize(self, i: int, req: ClusterRequest,
                   overflowed: bool) -> ClusterResult:
-        # The diffusion state is still resident in the lane, so a sweep
-        # workspace that turns out too small is re-swept at doubled caps
-        # (cheap — no diffusion re-run, and each shape compiles once).
         eng = self.engine
         n = eng.graph.n
         cap_n, cap_se = self.cap_n, self.sweep_cap_e
         max_cap_se = eng.sweep_cap_e << eng.max_bucket
-        if self.backend == "sparse":
-            # sparse lanes sweep their own support — the grid is cap_v, so
-            # only the sweep edge workspace can need a retry
-            p_sv = jax.tree.map(lambda buf: buf[i], self.state.p)
-            while True:
-                sw = sweep_cut_sparse(eng.graph, p_sv.ids, p_sv.vals,
-                                      p_sv.count, cap_se,
-                                      backend=self.ops_backend)
-                if not bool(sw.overflow) or cap_se >= max_cap_se:
-                    break
-                cap_se = min(cap_se * 2, max_cap_se)
-        else:
-            # dist lanes sweep on the handle's local CSR: the sharded p row
-            # is sliced back to the true vertex count (sentinel padding can
-            # never enter the sweep), and — the rows being bit-identical to
-            # a dense lane's — the sweep result is too
-            p_i = (self.state.p[i][: n] if self.backend == "dist"
-                   else self.state.p[i])
-            while True:
-                sw = sweep_cut_dense(eng.graph, p_i, cap_n, cap_se,
-                                     self.ops_backend)
-                if not bool(sw.overflow) or (cap_n >= n and
-                                             cap_se >= max_cap_se):
-                    break
+        sh = self._ensure_status()
+        size = None
+        if self.exec is not None:
+            # Harvest-gather executable: slice the one finished lane's
+            # support out of the pool and sweep it on-device — only the
+            # order buffer, 4 counters, and φ cross to the host, never the
+            # pool state.
+            order, meta, phi = self.exec.sweep(eng.graph, self.state,
+                                               jnp.asarray(i, jnp.int32))
+            meta = np.asarray(meta)   # [best_size, best_volume, nnz, ovf]
+            sweep_ovf = bool(meta[3])
+            exhausted = (cap_se >= max_cap_se
+                         and (self.backend == "sparse" or cap_n >= n))
+            if not sweep_ovf or exhausted:
+                size = int(meta[0])
+                conductance = float(np.asarray(phi))
+                volume, support = int(meta[1]), int(meta[2])
+                members = np.asarray(order)[:size].astype(np.int32)
+                overflowed = overflowed or sweep_ovf
+        if size is None:
+            # Sweep workspace too small at pool caps (rare), or a dist lane
+            # (no local sweep executable): sweep through the jit path on
+            # the capacity ladder — the diffusion state is still resident,
+            # so this costs a sweep, never a re-run, and each shape
+            # compiles once.
+            if self.exec is not None:   # pool caps already tried above
                 cap_n = min(cap_n * 2, n)
                 cap_se = min(cap_se * 2, max_cap_se)
-        overflowed = overflowed or bool(sw.overflow)
-        st = self.state
-        size = int(sw.best_size)
-        members = np.asarray(sw.order)[:size].astype(np.int32)
-        iters = int(np.asarray(st.t if self.method == "pr_nibble" else st.j)[i])
+            if self.backend == "sparse":
+                # sparse lanes sweep their own support — the grid is cap_v,
+                # so only the sweep edge workspace can need a retry
+                p_sv = jax.tree.map(lambda buf: buf[i], self.state.p)
+                while True:
+                    sw = sweep_cut_sparse(eng.graph, p_sv.ids, p_sv.vals,
+                                          p_sv.count, cap_se,
+                                          backend=self.ops_backend)
+                    if not bool(sw.overflow) or cap_se >= max_cap_se:
+                        break
+                    cap_se = min(cap_se * 2, max_cap_se)
+            else:
+                # dist lanes sweep on the handle's local CSR: the sharded p
+                # row is sliced back to the true vertex count (sentinel
+                # padding can never enter the sweep), and — the rows being
+                # bit-identical to a dense lane's — the sweep result is too
+                p_i = (self.state.p[i][: n] if self.backend == "dist"
+                       else self.state.p[i])
+                while True:
+                    sw = sweep_cut_dense(eng.graph, p_i, cap_n, cap_se,
+                                         self.ops_backend)
+                    if not bool(sw.overflow) or (cap_n >= n and
+                                                 cap_se >= max_cap_se):
+                        break
+                    cap_n = min(cap_n * 2, n)
+                    cap_se = min(cap_se * 2, max_cap_se)
+            overflowed = overflowed or bool(sw.overflow)
+            size = int(sw.best_size)
+            conductance = float(sw.best_conductance)
+            volume, support = int(sw.best_volume), int(sw.nnz)
+            members = np.asarray(sw.order)[:size].astype(np.int32)
         return ClusterResult(
             request=req,
-            conductance=float(sw.best_conductance),
+            conductance=conductance,
             size=size,
-            volume=int(sw.best_volume),
-            support=int(sw.nnz),
+            volume=volume,
+            support=support,
             cluster=members,
-            pushes=int(np.asarray(st.pushes)[i]),
-            iterations=iters,
+            pushes=int(sh[STATUS_PUSHES][i]),
+            iterations=int(sh[STATUS_ITER][i]),
             bucket=self.bucket,
             overflow=overflowed,
             backend=self.backend,
@@ -563,7 +540,8 @@ class LocalClusterEngine:
                  ops_backend: str = "auto", cap_x: int = 1 << 12,
                  dist_chip_budget: Optional[int] = None,
                  tracer: Optional[Tracer] = None,
-                 cost_ema_alpha: float = 0.3):
+                 cost_ema_alpha: float = 0.3,
+                 result_cache=1024):
         """``graph`` is any graph-like — a resident ``CSRGraph`` or a
         :class:`~repro.graphs.handle.GraphHandle` (possibly sharded over a
         mesh, which unlocks the ``dist`` lane pools).
@@ -587,7 +565,16 @@ class LocalClusterEngine:
         spans; tracing only *observes* state the engine computed, so traced
         results are bit-identical to untraced ones (docs/algorithms.md,
         guarantee #8).  ``cost_ema_alpha`` is the smoothing factor of every
-        pool's tick-cost EMA (the scheduler's cost model)."""
+        pool's tick-cost EMA (the scheduler's cost model).
+
+        ``result_cache`` is the versioned seed→result LRU
+        (:mod:`repro.serve.result_cache`): an int is its entry capacity, a
+        :class:`~repro.serve.result_cache.ResultCache` instance is shared
+        as-is (several engines over one graph may pool their hits), and
+        ``0``/``None`` disables caching.  A hit resolves at :meth:`submit`
+        — no lane, no tick — and is bit-identical to recomputing
+        (guarantee #9); bumping the handle's graph version invalidates
+        every entry at once."""
         if backend not in ("auto", "dense", "sparse", "dist"):
             raise ValueError(f"unknown backend: {backend!r}")
         self.handle = as_handle(graph)
@@ -612,9 +599,21 @@ class LocalClusterEngine:
         self.lru_pools = lru_pools
         self.max_bucket = max(0, (max_cap_e // cap_e).bit_length() - 1)
         self.pools: "OrderedDict[tuple, _Pool]" = OrderedDict()
+        # AOT executable cache: pool key → compiled tick programs.  Outlives
+        # pool eviction by design — see serve/aot.py.
+        self._exec_cache = ExecutableCache()
+        if isinstance(result_cache, ResultCache):
+            self.result_cache: Optional[ResultCache] = result_cache
+        elif result_cache:
+            self.result_cache = ResultCache(int(result_cache))
+        else:
+            self.result_cache = None
         self.stats: Dict = dict(steps=0, injections=0, promotions=0,
                                 completed=0, pools_created=0,
                                 pools_evicted=0, partial_harvests=0,
+                                status_syncs=0, aot_compiles=0,
+                                aot_cache_hits=0, aot_compile_s=0.0,
+                                result_cache_hits=0, result_cache_misses=0,
                                 bucket_shapes=set())
         self._results: Dict[int, ClusterResult] = {}
         self._next_idx = 0
@@ -630,6 +629,100 @@ class LocalClusterEngine:
         cached when the engine was built sharded-first): what the local lane
         pools step against and every harvest sweeps with."""
         return self.handle.local()
+
+    # -- AOT compile lifecycle ----------------------------------------------
+
+    def _pool_caps(self, key: tuple) -> Dict[str, int]:
+        """Workspace capacities of the pool at ``key``'s bucket — the
+        doubling ladder of the single-seed drivers, clamped at the graph's
+        natural sizes (and, for dist pools, at the shard's row count /
+        the edge workspace).  Centralized so the pool construction and the
+        AOT kernel builder can never disagree on a shape."""
+        _method, backend, _statics, _ops, bucket, _topo = key
+        n = self.handle.n
+        caps = dict(cap_f=min(self.cap_f << bucket, n + 1),
+                    cap_e=self.cap_e << bucket,
+                    cap_n=min(self.cap_n << bucket, n),
+                    sweep_cap_e=self.sweep_cap_e << bucket,
+                    cap_v=min(self.cap_v << bucket, n + 1))
+        if backend == "dist":
+            pg = self.handle.partitioned()
+            # dist cap_f is *per shard*: a local frontier can never exceed
+            # the shard's row count
+            caps["cap_f"] = min(self.cap_f << bucket, pg.rows_per + 1)
+            caps["cap_x"] = min(self.cap_x << bucket, caps["cap_e"])
+        return caps
+
+    def _executables_for(self, key: tuple):
+        """The AOT-compiled tick executables for pool ``key``, building
+        (lower + compile against the pool's exact avals) at most once per
+        key for the engine's lifetime.  Ladder promotion hops between
+        already-compiled buckets; an LRU-evicted pool's re-creation is a
+        cache hit, never a re-trace."""
+        method, backend, statics, ops_backend, _bucket, _topo = key
+        caps = self._pool_caps(key)
+        n = self.handle.n
+
+        def build():
+            if backend == "sparse":
+                kern = sparse_lane_kernels(
+                    n, statics, caps["cap_f"], caps["cap_v"], caps["cap_e"],
+                    caps["sweep_cap_e"], self.rounds_per_step, ops_backend)
+            else:
+                kern = dense_lane_kernels(
+                    n, method, statics, caps["cap_f"], caps["cap_e"],
+                    caps["cap_n"], caps["sweep_cap_e"],
+                    self.rounds_per_step, ops_backend)
+            return compile_lane_executables(kern, self.graph,
+                                            self.batch_slots)
+
+        ex = self._exec_cache.get(key, build)
+        cs = self._exec_cache.stats()
+        self.stats["aot_compiles"] = cs["compiles"]
+        self.stats["aot_cache_hits"] = cs["hits"]
+        self.stats["aot_compile_s"] = cs["compile_seconds"]
+        return ex
+
+    def warmup(self, requests: Optional[List[ClusterRequest]] = None,
+               max_bucket: int = 1) -> Dict:
+        """Eagerly AOT-compile the tick executables every request in
+        ``requests`` would touch, over buckets ``0..max_bucket`` of the
+        capacity ladder — so the serving steady state never pays a
+        first-touch trace.  ``requests`` are *prototypes* (seed/α/ε don't
+        matter — only the pool-key material: method, statics, resolved
+        backends); default is one plain PR-Nibble prototype.  Dist pools
+        keep the jit path (their shard_map programs warm on first tick) and
+        are skipped.  Returns ``dict(seconds, compiled, buckets)``."""
+        t0 = time.perf_counter()
+        if requests is None:
+            requests = [ClusterRequest(seed=0)]
+        before = self._exec_cache.stats()["compiles"]
+        hi = min(max_bucket, self.max_bucket)
+        for req in requests:
+            for b in range(hi + 1):
+                key = self._pool_key(req, b)
+                if key[1] == "dist":
+                    continue
+                self._executables_for(key)
+        return dict(seconds=time.perf_counter() - t0,
+                    compiled=self._exec_cache.stats()["compiles"] - before,
+                    buckets=hi + 1)
+
+    # -- result cache --------------------------------------------------------
+
+    def cached_result(self, req: ClusterRequest) -> Optional[ClusterResult]:
+        """The cached converged result for ``req`` at the current graph
+        version, or None.  A hit is a fresh :class:`ClusterResult` copy
+        carrying ``req`` itself — bit-identical cluster/φ to what a lane
+        would compute (guarantee #9)."""
+        if self.result_cache is None:
+            return None
+        key = result_key(req, self._resolve_backend(req),
+                         self.handle.version)
+        res = self.result_cache.get(key, request=req)
+        self.stats["result_cache_hits"] = self.result_cache.hits
+        self.stats["result_cache_misses"] = self.result_cache.misses
+        return res
 
     # -- scheduling ----------------------------------------------------------
 
@@ -698,8 +791,7 @@ class LocalClusterEngine:
         key = self._pool_key(req, bucket)
         pool = self.pools.get(key)
         if pool is None:
-            pool = _Pool(self, req.method, key[1], key[2], bucket,
-                         ops_backend=key[3], topo=key[5])
+            pool = _Pool(self, key)
             self.pools[key] = pool
         self.pools.move_to_end(key)
         pool.queue.append((idx, req))   # before evict: a pool with work is safe
@@ -720,6 +812,10 @@ class LocalClusterEngine:
     def _complete(self, idx: int, res: ClusterResult) -> None:
         self._results[idx] = res
         self.stats["completed"] += 1
+        if self.result_cache is not None and not res.deadline_missed:
+            self.result_cache.put(
+                result_key(res.request, res.backend, self.handle.version),
+                res)
         rt = self._rt.get(idx)
         if rt is not None:
             # inf conductance (empty partial harvest) is not valid JSON
@@ -739,8 +835,14 @@ class LocalClusterEngine:
     # -- public API ----------------------------------------------------------
 
     def submit(self, req: ClusterRequest,
-               _trace: Optional[RequestTrace] = None) -> int:
+               _trace: Optional[RequestTrace] = None,
+               _skip_cache: bool = False) -> int:
         """Queue a request; returns a ticket usable with :meth:`result`.
+
+        A result-cache hit short-circuits the queue entirely: the ticket is
+        issued already-resolved (ready for :meth:`result` immediately), no
+        lane is occupied, no tick runs.  ``_skip_cache`` lets the async
+        layer opt out when it has already consulted the cache itself.
 
         ``_trace`` lets the async layer hand down the request's
         :class:`~repro.serve.tracing.RequestTrace` (already carrying its
@@ -754,6 +856,13 @@ class LocalClusterEngine:
             rt = self.tracer.request(seed=req.seed, method=req.method)
         if rt is not None:
             self._rt[idx] = rt
+        if not _skip_cache:
+            hit = self.cached_result(req)
+            if hit is not None:
+                if rt is not None:
+                    rt.event("cache_hit", seed=req.seed)
+                self._complete(idx, hit)
+                return idx
         self._enqueue(idx, req, 0)
         return idx
 

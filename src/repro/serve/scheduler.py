@@ -52,7 +52,8 @@ from repro.graphs.handle import GraphHandle
 from repro.graphs.partition import PartitionedCSR
 from .cluster_engine import (ClusterRequest, ClusterResult,
                              LocalClusterEngine)
-from .telemetry import MetricsRegistry, pool_label
+from .telemetry import MetricsRegistry, load_cost_table, lookup_cost, \
+    pool_label
 from .tracing import RequestTrace, Tracer
 
 __all__ = ["AsyncClusterEngine", "ClusterFuture", "QueueFull"]
@@ -157,6 +158,12 @@ class AsyncClusterEngine:
         (default) inherits the engine's tracer, if any.  On deadline expiry
         the victim's span tree is dumped into ``telemetry`` as a bounded
         postmortem.  Tracing never changes answers (guarantee #8).
+    cost_table : characterized tick costs seeding the EDF cost model before
+        any EMA exists — a ``serve_bench --characterize`` artifact (path or
+        dict; see :func:`~repro.serve.telemetry.load_cost_table`).  Without
+        it, a cold pool is costed at ``_DEFAULT_TICK_COST`` until its first
+        measured tick, which under-ranks slow pools exactly when deadlines
+        are tightest (the first wave).  Measured EMAs always take over.
     """
 
     _DEFAULT_TICK_COST = 1e-3   # planner's cost guess before a pool's 1st EMA
@@ -166,6 +173,7 @@ class AsyncClusterEngine:
                  telemetry: Optional[MetricsRegistry] = None,
                  default_deadline_ms: Optional[float] = None,
                  tracer: Optional[Tracer] = None,
+                 cost_table=None,
                  **engine_kwargs):
         if isinstance(engine_or_graph, LocalClusterEngine):
             if engine_kwargs:
@@ -190,6 +198,7 @@ class AsyncClusterEngine:
         if tracer is not None:
             self.engine.tracer = tracer     # one recorder for both layers
         self.tracer = tracer if tracer is not None else self.engine.tracer
+        self.cost_table = load_cost_table(cost_table)
         self.last_plan: List[tuple] = []     # EDF order of the latest tick
         self._mutex = threading.Lock()       # admission queue + records
         self._engine_lock = threading.RLock()  # serializes engine access
@@ -211,6 +220,13 @@ class AsyncClusterEngine:
         given (the stored request is updated so the result reports the
         effective values).  Raises :class:`QueueFull` when ``max_queue``
         requests are already unresolved.
+
+        A seed→result cache hit resolves the future *here*, on the caller's
+        thread: no admission slot consumed, no lane occupied, no tick — the
+        engine's cached converged answer (bit-identical to recomputing,
+        guarantee #9) comes back before the drive loop ever sees the
+        request.  Hits can therefore never be rejected by admission control
+        and never miss a deadline.
         """
         updates = {}
         if deadline_ms is not None:
@@ -234,6 +250,20 @@ class AsyncClusterEngine:
                 seed=req.seed, method=req.method,
                 deadline_ms=req.deadline_ms, priority=req.priority)
             fut.trace.phase("queued")
+        # Result-cache probe (the cache and the version read are themselves
+        # thread-safe, so no engine lock — a hit must not wait out a tick)
+        hit = self.engine.cached_result(req)
+        if hit is not None:
+            self.telemetry.inc("scheduler/submitted")
+            self.telemetry.inc("scheduler/cache_hits")
+            latency_ms = (time.monotonic() - fut.submitted) * 1e3
+            self.telemetry.observe("scheduler/request_latency",
+                                   latency_ms / 1e3)
+            self.telemetry.inc("scheduler/completed")
+            if fut.trace is not None:
+                fut.trace.resolve_cached(seed=req.seed)
+            fut._resolve(hit, latency_ms)
+            return fut
         with self._mutex:
             if self._inflight >= self.max_queue:
                 self.telemetry.inc("scheduler/rejected")
@@ -368,11 +398,14 @@ class AsyncClusterEngine:
                     deadlines.append(rec.deadline)
             # cost estimate: the registry EMA is primary (fed by our ticks);
             # a fresh registry over a warm engine falls back to the pool's
-            # own measurement before the cold-start default
+            # own measurement, then to the characterized cost table, and
+            # only then to the cold-start default
             ema = self.telemetry.ema_value(
                 f"pool/{pool_label(key)}/tick_cost")
             if ema is None:
                 ema = pool.cost_ema
+            if ema is None:
+                ema = lookup_cost(self.cost_table, key)
             cost = (ema if ema is not None else self._DEFAULT_TICK_COST) \
                 * pool.pending_ticks()
             slack = (min(deadlines) - now - cost) if deadlines else None
@@ -436,5 +469,7 @@ class AsyncClusterEngine:
             tm.set_gauge("scheduler/queue_depth",
                          engine_queued + len(self._admissions))
         for stat in ("promotions", "pools_evicted", "injections",
-                     "completed", "partial_harvests", "steps"):
+                     "completed", "partial_harvests", "steps",
+                     "status_syncs", "aot_compiles", "aot_cache_hits",
+                     "result_cache_hits", "result_cache_misses"):
             tm.set_gauge(f"engine/{stat}", self.engine.stats[stat])

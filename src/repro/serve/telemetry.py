@@ -36,7 +36,7 @@ from collections import deque
 from typing import Dict, List, Optional
 
 __all__ = ["Counter", "EMA", "Histogram", "MetricsRegistry", "pool_label",
-           "SNAPSHOT_SCHEMA"]
+           "load_cost_table", "lookup_cost", "SNAPSHOT_SCHEMA"]
 
 # Bumped whenever the snapshot shape changes; lets accumulated BENCH_*.json
 # artifacts be compared across PRs without guessing their vintage.
@@ -59,6 +59,45 @@ def pool_label(key: tuple) -> str:
         axis, shards = topo
         backend = f"{backend}@{axis}{shards}"
     return f"{method}:{backend}:{ops_backend}:{statics}:b{bucket}"
+
+
+def load_cost_table(src) -> Dict[str, float]:
+    """Characterized tick costs for the EDF planner's cold start, from a
+    ``serve_bench --characterize`` artifact (path or parsed dict; see
+    benchmarks/baselines/tick_costs.json).  Entries map pool labels — and
+    coarser ``"method:backend"`` fallbacks — to mean tick seconds; a missing
+    or malformed source degrades to an empty table, never an error (the
+    planner falls back to its built-in default cost)."""
+    if src is None:
+        return {}
+    if isinstance(src, dict):
+        doc = src
+    else:
+        try:
+            with open(src) as fh:
+                doc = json.load(fh)
+        except (OSError, ValueError):
+            return {}
+    entries = doc.get("entries", doc) if isinstance(doc, dict) else {}
+    out = {}
+    for k, v in entries.items():
+        try:
+            out[str(k)] = float(v)
+        except (TypeError, ValueError):
+            continue
+    return out
+
+
+def lookup_cost(table: Dict[str, float], key: tuple) -> Optional[float]:
+    """The characterized tick cost for a pool key: exact label first
+    (:func:`pool_label`), then the ``"method:backend"`` family average —
+    bucket/statics shift cost far less than the method/backend pair does."""
+    if not table:
+        return None
+    cost = table.get(pool_label(key))
+    if cost is not None:
+        return cost
+    return table.get(f"{key[0]}:{key[1]}")
 
 
 class Counter:

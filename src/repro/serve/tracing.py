@@ -362,6 +362,16 @@ class RequestTrace:
             self.status = status
         self.tracer.end(self.root, t1=t, status=status, **attrs)
 
+    def resolve_cached(self, **attrs) -> None:
+        """Terminal sequence for a result-cache hit: a ``cache_hit``
+        lifecycle event, a (zero-ish width) ``deliver`` phase, and a
+        resolved finish — the flight-recorder shape of a request that never
+        touched a lane (serve/result_cache.py).  ``attrs`` (cache key
+        context, seed, …) land on both the event and the phase."""
+        self.event("cache_hit", **attrs)
+        self.phase("deliver", cached=True, **attrs)
+        self.finish("resolved")
+
     # -- attribution ---------------------------------------------------------
 
     @property

@@ -137,8 +137,11 @@ labels = [pool_label(k) for k, _ in sched.engine.pools.items()]
 out["dist_labels"] = sorted(l for l in labels if "dist" in l)
 out["dist_pool_served"] = sum(r.backend == "dist" for r in res)
 
-# dist pools must be schedulable observables like any other pool
+# dist pools must be schedulable observables like any other pool (clear the
+# result cache first: the mixed stream already answered this seed, and dist
+# shares the dense cache family, so a hit would resolve without any lane)
 eng2 = sched.engine
+eng2.result_cache.invalidate()
 req = ClusterRequest(seed=int(seeds[0]), alpha=0.05, eps=1e-5, backend="dist")
 t = eng2.submit(req)
 key = eng2._pool_key(req, 0)

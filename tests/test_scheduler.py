@@ -302,3 +302,51 @@ def test_pool_cost_observables_feed_planner(sbm_graph):
     assert reg_ema is not None and reg_ema > 0
     sched.drain()
     assert pool.pending_ticks() == 0
+
+
+# ------------------------------------------------------- result-cache wiring
+
+def test_cache_hit_resolves_before_admission_under_deadline(sbm_graph):
+    """A repeat request resolves at submit() straight from the engine's
+    seed→result cache: done before any tick, bit-identical to the computed
+    twin, never flagged late — even under a deadline no lane could meet —
+    and without occupying a lane or a queue slot."""
+    sched = AsyncClusterEngine(sbm_graph, batch_slots=2, max_queue=8,
+                               **ENGINE_CAPS)
+    first = sched.submit(ClusterRequest(seed=11, alpha=0.05, eps=1e-4))
+    sched.drain()
+    a = first.result()
+    injections = sched.engine.stats["injections"]
+    fut = sched.submit(ClusterRequest(seed=11, alpha=0.05, eps=1e-4),
+                       deadline_ms=1e-3)
+    assert fut.done()                    # resolved at submit: zero ticks ran
+    b = fut.result()
+    assert not b.deadline_missed
+    assert sched.engine.stats["injections"] == injections
+    assert sched.inflight() == 0
+    assert sched.telemetry.counter_value("scheduler/cache_hits") == 1
+    assert a.conductance == b.conductance and a.size == b.size
+    assert a.pushes == b.pushes and a.iterations == b.iterations
+    assert np.array_equal(a.cluster, b.cluster)
+
+
+def test_cost_table_seeds_planner_cold_start(sbm_graph, tmp_path):
+    """The characterized tick-cost table keys the EDF planner's estimate for
+    a never-ticked pool: exact pool label first, then the method:backend
+    family fallback — the cold-start fix for freshly created pools."""
+    from repro.serve.telemetry import load_cost_table, lookup_cost
+    p = tmp_path / "tick_costs.json"
+    p.write_text(json.dumps(dict(schema="repro.bench.tick_costs/v1",
+                                 entries={"pr_nibble:dense": 0.123})))
+    sched = AsyncClusterEngine(sbm_graph, batch_slots=2, max_queue=8,
+                               cost_table=str(p), **ENGINE_CAPS)
+    assert sched.cost_table == {"pr_nibble:dense": 0.123}
+    # enqueue straight at the engine: the pool now exists but never ticked
+    t = sched.engine.submit(ClusterRequest(seed=5, alpha=0.05, eps=1e-4))
+    (key, pool), = sched.engine.live_pools()
+    assert pool.cost_ema is None         # the cold-start case
+    assert lookup_cost(sched.cost_table, key) == 0.123
+    sched.engine.drain()
+    assert sched.engine.result(t).size > 0
+    # unreadable/malformed tables degrade to the built-in guess, never raise
+    assert load_cost_table(str(tmp_path / "missing.json")) == {}
